@@ -1,0 +1,30 @@
+"""Shared bench utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def gb(x: float) -> str:
+    return f"{x / 1e9:.2f}GB"

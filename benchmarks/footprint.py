@@ -1,0 +1,54 @@
+"""Paper Table 1: activation / weight / total memory footprint per
+quantization scheme, at the longest CASP15 protein (T1169, Ns = 3364).
+
+Exact analytic accounting over the full ESMFold-scale trunk's Pair-dataflow
+activation inventory (48 blocks) x each scheme's stored bits-per-value, plus
+each scheme's weight precision on the real parameter count.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_ppm_config
+from repro.core.schemes import SCHEMES, make_scheme
+from repro.models.ppm import pair_activation_inventory
+from repro.models.ppm.model import init_ppm
+
+NS_T1169 = 3364
+
+
+def param_count(cfg) -> int:
+    sds = jax.eval_shape(lambda: init_ppm(jax.random.PRNGKey(0), cfg))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(sds))
+
+
+def footprint_table(ns: int = NS_T1169):
+    cfg = get_ppm_config()
+    inv = pair_activation_inventory(cfg, ns)
+    n_params = param_count(cfg)
+    rows = {}
+    for name in SCHEMES:
+        s = make_scheme(name)
+        act_bits = sum(math.prod(shape) * s.act_bits(site, shape[-1])
+                       for site, shape in inv) * cfg.blocks
+        act_gb = act_bits / 8 / 1e9
+        w_gb = n_params * s.weight_bits() / 8 / 1e9
+        rows[name] = (act_gb, w_gb, act_gb + w_gb)
+    return rows, n_params
+
+
+def main():
+    rows, n_params = footprint_table()
+    base = rows["baseline_fp16"][2]
+    for name, (a, w, t) in rows.items():
+        emit(f"footprint/{name}", 0.0,
+             f"act={a:.1f}GB weight={w:.2f}GB total={t:.1f}GB "
+             f"vs_fp16={base / t:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

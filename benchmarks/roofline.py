@@ -1,0 +1,64 @@
+"""§Roofline table generator: reads the dry-run JSONL artifacts and prints
+the per-(arch x shape x mesh) roofline terms + bottleneck + useful-compute
+ratio, in markdown (for EXPERIMENTS.md) or CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path: str):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def fmt_row(r) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| skip: {r['skipped'][:40]} | — |")
+    if "error" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| ERROR | — |")
+    rl = r["roofline"]
+    peak = r["mem"]["peak_bytes_per_dev"] / 1e9
+    return ("| {arch} | {shape} | {mesh} | {tc:.3e} | {tm:.3e} | {tl:.3e} "
+            "| {bn} | {uf:.2f} | {rf:.3f} | {pk:.2f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=rl["t_compute_s"], tm=rl["t_memory_s"], tl=rl["t_collective_s"],
+        bn=rl["bottleneck"][:4], uf=rl.get("useful_fraction", 0.0),
+        rf=rl.get("roofline_fraction", 0.0), pk=peak)
+
+
+HEADER = ("| arch | shape | mesh | t_compute | t_memory | t_collective "
+          "| bound | useful | roofline_frac | peak GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="artifacts/dryrun_baseline.jsonl")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load(args.path)
+    print(HEADER)
+    for r in rows:
+        if args.mesh and r.get("mesh") != args.mesh:
+            continue
+        print(fmt_row(r))
+    ok = [r for r in rows if "roofline" in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"].get("roofline_fraction", 0))
+        coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"]
+                   / max(r["roofline"]["t_compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']}"
+              f" x {worst['mesh']} ({worst['roofline']['roofline_fraction']:.4f})")
+        print(f"most collective-bound:   {coll['arch']} x {coll['shape']}"
+              f" x {coll['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (accuracy, compute_cost, footprint, latency,
+                            peak_memory)
+    for mod, label in ((footprint, "Table 1 (memory footprint)"),
+                       (accuracy, "Fig 13 (TM-score) + §4.1 RMSE"),
+                       (peak_memory, "Fig 15 (peak memory)"),
+                       (compute_cost, "Fig 16a (compute cost)"),
+                       (latency, "Fig 14 (latency scaling)")):
+        print(f"# --- {label} ---", flush=True)
+        try:
+            mod.main()
+        except Exception as e:                      # pragma: no cover
+            traceback.print_exc()
+            print(f"{mod.__name__},0,ERROR:{e}")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end serving example (the paper's workload kind): a batched
+protein-folding service running the AAQ dataflow, reporting per-request
+latency, structural fidelity vs the FP reference, and the packed-activation
+memory the AAQ layout holds per request.
+
+    PYTHONPATH=src python examples/fold_server.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+raise SystemExit(main(["--mode", "ppm", "--n", "4",
+                       "--scheme", "lightnobel_aaq",
+                       "--min-len", "24", "--max-len", "48"]))

@@ -1,0 +1,49 @@
+"""Quickstart: fold a protein with and without AAQ, compare structures.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the paper's headline claim at laptop scale: Token-wise
+Adaptive Activation Quantization compresses every Pair-Representation
+activation to ~4-8 bits (vs 16) while the predicted structure stays
+essentially identical (Delta-TM ~ 0).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduce_ppm_config
+from repro.core import make_scheme
+from repro.core.policy import AAQConfig
+from repro.data.pipeline import ProteinSampler
+from repro.models.ppm import init_ppm, ppm_forward, tm_score
+from repro.models.ppm.model import pair_activation_inventory
+
+cfg = reduce_ppm_config()
+params = init_ppm(jax.random.PRNGKey(0), cfg)
+seq = ProteinSampler(seed=3).sample(0, length=40)
+aatype = jnp.asarray(seq)[None]
+print(f"protein: {len(seq)} residues")
+
+out_fp = ppm_forward(params, aatype, cfg)                      # FP32 reference
+aaq = make_scheme("lightnobel_aaq")
+out_q = ppm_forward(params, aatype, cfg, aaq)                  # AAQ dataflow
+
+tm = float(tm_score(out_q["coords"][0], out_fp["coords"][0]))
+print(f"TM-score(AAQ vs FP32) = {tm:.4f}   (paper: Delta-TM < 0.001)")
+
+# memory story: bits per stored activation value in the pair dataflow
+inv = pair_activation_inventory(cfg, ns=len(seq))
+import math
+fp_bits = sum(math.prod(s) * 16 for _, s in inv)
+q_bits = sum(math.prod(s) * aaq.act_bits(site, s[-1]) for site, s in inv)
+print(f"pair-activation footprint: {fp_bits / 8 / 1e6:.2f} MB (fp16) -> "
+      f"{q_bits / 8 / 1e6:.2f} MB (AAQ)  [{fp_bits / q_bits:.2f}x smaller]")
+
+# the three policy groups in action
+for site in ("tri_mul_out.pre_ln", "tri_attn_start.post_ln",
+             "tri_mul_out.gate"):
+    pol = AAQConfig().policy_for(site)
+    print(f"  {site:28s} -> Group {pol.name}: INT{pol.bits}"
+          f" + {pol.k_outliers} outliers")

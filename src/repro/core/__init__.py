@@ -1,0 +1,16 @@
+"""repro.core — LightNobel's contribution: Token-wise Adaptive Activation
+Quantization (AAQ) as a composable JAX module."""
+from repro.core.policy import (AAQConfig, DISABLED, GROUP_A, GROUP_B, GROUP_C,
+                               NO_QUANT, QuantPolicy)
+from repro.core.qmatmul import qmatmul, qmatmul_fused_ref
+from repro.core.qtensor import QTensor, pack_int4, qmax, unpack_int4
+from repro.core.quantize import (dequantize, fake_quant, fake_quant_ste,
+                                 quant_rmse, quantize)
+from repro.core.schemes import SCHEMES, QuantScheme, make_scheme
+
+__all__ = [
+    "AAQConfig", "DISABLED", "GROUP_A", "GROUP_B", "GROUP_C", "NO_QUANT",
+    "QuantPolicy", "QTensor", "pack_int4", "unpack_int4", "qmax",
+    "quantize", "dequantize", "fake_quant", "fake_quant_ste", "quant_rmse",
+    "qmatmul", "qmatmul_fused_ref", "SCHEMES", "QuantScheme", "make_scheme",
+]

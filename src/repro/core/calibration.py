@@ -1,0 +1,83 @@
+"""Calibration tooling: the paper's §3.3/§3.4 activation analysis.
+
+Computes per-token statistics (mean |x|, 3-sigma outlier counts) for every
+instrumented activation site, and classifies sites into groups A/B/C with the
+thresholds implied by Fig. 6(c):
+
+    A: mean|x| large  (paper: 82.14, ~2.31 outliers/token)
+    B: mean|x| small, outliers/token >= 1  (paper: 4.05 / 1.69)
+    C: mean|x| small, outliers/token  < 1  (paper: 3.85 / 0.64)
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import GROUP_A, GROUP_B, GROUP_C, QuantPolicy
+
+
+@dataclasses.dataclass
+class SiteStats:
+    abs_mean: float = 0.0
+    outliers_per_token: float = 0.0
+    token_var: float = 0.0      # variance of per-token means (token-wise axis)
+    channel_var: float = 0.0    # variance of per-channel means
+    n_samples: int = 0
+
+
+def token_stats(x: jax.Array) -> dict[str, jax.Array]:
+    """Per-activation statistics over the token axis (trailing dim = channel)."""
+    xf = jnp.abs(x.astype(jnp.float32)).reshape(-1, x.shape[-1])   # (T, H)
+    mu, sd = jnp.mean(xf), jnp.std(xf)
+    outliers = jnp.sum(xf > mu + 3.0 * sd, axis=-1)                # 3-sigma rule
+    return {
+        "abs_mean": jnp.mean(xf),
+        "outliers_per_token": jnp.mean(outliers.astype(jnp.float32)),
+        "token_var": jnp.var(jnp.mean(xf, axis=1)),    # across tokens
+        "channel_var": jnp.var(jnp.mean(xf, axis=0)),  # across channels
+    }
+
+
+def classify(abs_mean: float, outliers_per_token: float,
+             large_value_threshold: float = 20.0) -> QuantPolicy:
+    """Group assignment per Fig. 6(c) characteristics."""
+    if abs_mean >= large_value_threshold:
+        return GROUP_A
+    if outliers_per_token >= 1.0:
+        return GROUP_B
+    return GROUP_C
+
+
+class Calibrator:
+    """Accumulates site stats across forward passes (AAQConfig.collect_stats).
+
+    Models call ``calibrator.observe(site, x)``; afterwards
+    ``calibrator.site_table()`` yields a measured policy table that can be
+    compared against / substituted for ``DEFAULT_SITE_TABLE``.
+    """
+
+    def __init__(self):
+        self._acc: dict[str, list[dict[str, float]]] = defaultdict(list)
+
+    def observe(self, site: str, x: jax.Array) -> None:
+        stats = jax.tree.map(lambda a: float(a), token_stats(x))
+        self._acc[site].append(stats)
+
+    def stats(self) -> dict[str, SiteStats]:
+        out = {}
+        for site, rows in self._acc.items():
+            agg = {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
+            out[site] = SiteStats(abs_mean=agg["abs_mean"],
+                                  outliers_per_token=agg["outliers_per_token"],
+                                  token_var=agg["token_var"],
+                                  channel_var=agg["channel_var"],
+                                  n_samples=len(rows))
+        return out
+
+    def site_table(self) -> dict[str, QuantPolicy]:
+        return {site: classify(s.abs_mean, s.outliers_per_token)
+                for site, s in self.stats().items()}

@@ -1,0 +1,112 @@
+"""AAQ policy table: the 'Adaptive' in Adaptive Activation Quantization.
+
+Paper §4.2 + Fig. 6: every activation site in the Pair-Representation dataflow
+belongs to one of three groups, each with its own (inlier bits, outlier k)
+scheme found by design-space exploration (Fig. 11):
+
+    Group A  pre-LayerNorm residual-stream tensors   -> INT8 inliers, 4 outliers
+    Group B  post-LayerNorm, pre-linear tensors      -> INT4 inliers, 4 outliers
+    Group C  everything else (gates, probs, small)   -> INT4 inliers, 0 outliers
+
+The policy table maps *site names* (strings baked into the model code) to
+groups, so models stay declarative: ``aaq.act(x, "tri_mul.pre_ln")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import fake_quant as _fake_quant, fake_quant_ste as _fake_quant_ste, quantize as _quantize_fn
+from repro.core.qtensor import QTensor
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    bits: int          # inlier precision (4 or 8); 16 means "leave unquantized"
+    k_outliers: int
+    name: str = ""
+
+    @property
+    def enabled(self) -> bool:
+        return self.bits < 16
+
+    def bits_per_value(self, feature_dim: int) -> float:
+        """Average stored bits per original value (drives footprint tables).
+
+        inliers: bits * H  (int4 nibble-packed)
+        outliers: k * (16-bit value + 32-bit index)   [int32 idx is the TPU
+                  adaptation; the ASIC uses log2(H)=7-bit indices]
+        scale: one f32 per token.
+        """
+        if not self.enabled:
+            return 16.0
+        total = self.bits * feature_dim + self.k_outliers * (16 + 32) + 32
+        return total / feature_dim
+
+
+GROUP_A = QuantPolicy(bits=8, k_outliers=4, name="A")
+GROUP_B = QuantPolicy(bits=4, k_outliers=4, name="B")
+GROUP_C = QuantPolicy(bits=4, k_outliers=0, name="C")
+NO_QUANT = QuantPolicy(bits=16, k_outliers=0, name="none")
+
+# Site-pattern -> group. Patterns are regexes matched against site names; the
+# first hit wins. This is the paper's Fig. 6 coloring expressed as data.
+DEFAULT_SITE_TABLE: tuple[tuple[str, QuantPolicy], ...] = (
+    (r".*\.pre_ln$", GROUP_A),        # residual stream entering LayerNorm
+    (r".*\.residual$", GROUP_A),
+    (r".*\.post_ln$", GROUP_B),       # normalized, about to hit a linear
+    (r".*\.qkv_in$", GROUP_B),
+    (r".*\.gate$", GROUP_C),          # sigmoid gates, small dynamic range
+    (r".*\.probs$", GROUP_C),         # attention probabilities
+    (r".*\.proj_in$", GROUP_C),       # products of small weights
+    (r".*\.av$", GROUP_C),
+    (r".*", GROUP_C),                 # default: most conservative size-wise
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AAQConfig:
+    """Runtime switchboard for AAQ. ``enabled=False`` => exact FP dataflow."""
+
+    enabled: bool = True
+    site_table: tuple[tuple[str, QuantPolicy], ...] = DEFAULT_SITE_TABLE
+    overrides: Mapping[str, QuantPolicy] | None = None   # exact-name overrides
+    ste: bool = False            # straight-through grads (training path)
+    collect_stats: bool = False  # calibration mode
+
+    def policy_for(self, site: str) -> QuantPolicy:
+        if not self.enabled:
+            return NO_QUANT
+        if self.overrides and site in self.overrides:
+            return self.overrides[site]
+        for pat, pol in self.site_table:
+            if re.fullmatch(pat, site):
+                return pol
+        return NO_QUANT
+
+    # --- model-facing API -------------------------------------------------
+    def act(self, x: jax.Array, site: str) -> jax.Array:
+        """Fake-quant an activation at ``site`` (reference dataflow).
+
+        The compute-optimized path instead keeps the QTensor packed and feeds
+        it to ``qmatmul``; this fake-quant path defines the numerics and is
+        what accuracy benches run.
+        """
+        pol = self.policy_for(site)
+        if not pol.enabled:
+            return x
+        fq = _fake_quant_ste if self.ste else _fake_quant
+        return fq(x, pol.bits, pol.k_outliers).astype(x.dtype)
+
+    def quantize(self, x: jax.Array, site: str) -> QTensor | jax.Array:
+        pol = self.policy_for(site)
+        if not pol.enabled:
+            return x
+        return _quantize_fn(x, pol.bits, pol.k_outliers)
+
+
+DISABLED = AAQConfig(enabled=False)

@@ -1,0 +1,94 @@
+"""Token-wise Adaptive Activation Quantization (AAQ) — reference path.
+
+Pure-jnp implementation of the paper's §4.1 runtime quantization (the ASIC
+VVPU's job).  The Pallas kernel in ``repro.kernels.aaq_quant`` is the fused
+drop-in; this module is the semantic definition and the oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor, pack_int4, qmax, unpack_int4
+
+_EPS = 1e-12
+
+
+def _split_outliers(x: jax.Array, k: int):
+    """Dynamic top-k outlier split (paper: VVPU bitonic top-k, k static/group).
+
+    Returns (inlier_x, outlier_values, outlier_idx) with outlier slots zeroed
+    in ``inlier_x`` so the integer matmul path never double-counts them.
+    """
+    if k == 0:
+        zshape = (*x.shape[:-1], 0)
+        return (x, jnp.zeros(zshape, jnp.bfloat16),
+                jnp.zeros(zshape, jnp.int32))
+    _, idx = jax.lax.top_k(jnp.abs(x), k)                    # (..., k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)              # original values
+    mask = jnp.zeros(x.shape, jnp.bool_)
+    mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+    return jnp.where(mask, 0.0, x), vals.astype(jnp.bfloat16), idx.astype(jnp.int32)
+
+
+def quantize(x: jax.Array, bits: int, k_outliers: int) -> QTensor:
+    """Uniform symmetric token-wise quantization with top-k outlier handling.
+
+    Eq. (1):  M = max(|min|, |max|) over inliers;  sigma = M / (2^(m-1)-1);
+    Q(x) = round(x / sigma).
+    """
+    assert bits in (4, 8), bits
+    h = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    inl, ovals, oidx = _split_outliers(xf, k_outliers)
+    m = jnp.max(jnp.abs(inl), axis=-1, keepdims=True)
+    sigma = jnp.maximum(m / qmax(bits), _EPS)
+    q = jnp.clip(jnp.round(inl / sigma), -qmax(bits), qmax(bits)).astype(jnp.int8)
+    if bits == 4:
+        if q.shape[-1] % 2:                       # odd feature dim: pad a lane
+            q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+        q = pack_int4(q)
+    return QTensor(inliers=q, scales=sigma, outlier_values=ovals,
+                   outlier_idx=oidx, bits=bits, k_outliers=k_outliers,
+                   feature_dim=h, orig_dtype=x.dtype)
+
+
+def dequantize(qt: QTensor) -> jax.Array:
+    """Reconstruct x_hat: scaled inliers + outliers scattered back in place."""
+    q = unpack_int4(qt.inliers) if qt.bits == 4 else qt.inliers
+    q = q[..., :qt.feature_dim]                   # drop int4 pad lane if any
+    x = q.astype(jnp.float32) * qt.scales
+    if qt.k_outliers:
+        x = jnp.put_along_axis(x, qt.outlier_idx,
+                               qt.outlier_values.astype(jnp.float32),
+                               axis=-1, inplace=False)
+    return x.astype(qt.orig_dtype)
+
+
+def fake_quant(x: jax.Array, bits: int, k_outliers: int) -> jax.Array:
+    """quantize->dequantize round trip (accuracy evaluation path)."""
+    return dequantize(quantize(x, bits, k_outliers))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant_ste(x: jax.Array, bits: int, k_outliers: int) -> jax.Array:
+    return fake_quant(x, bits, k_outliers)
+
+
+def _fq_fwd(x, bits, k_outliers):
+    return fake_quant(x, bits, k_outliers), None
+
+
+def _fq_bwd(bits, k_outliers, _, g):
+    return (g,)  # straight-through estimator
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quant_rmse(x: jax.Array, bits: int, k_outliers: int) -> jax.Array:
+    """RMSE of the quantization round trip (paper §4.1 ablation metric)."""
+    xf = x.astype(jnp.float32)
+    return jnp.sqrt(jnp.mean((fake_quant(x, bits, k_outliers).astype(jnp.float32) - xf) ** 2))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical hot spots (each: kernel +
+ops.py jit wrapper + ref.py pure-jnp oracle, validated in interpret mode):
+
+  aaq_quant       fused token-wise AAQ runtime quantization (VVPU analogue)
+  aaq_matmul      dequantization-free INT4/INT8 matmul, deferred per-token
+                  scale + rank-k outlier correction (RMPU analogue)
+  flash_attention token-wise MHA with pair bias / causal / SWA / GQA /
+                  kv_valid_len (the paper's §5.4 dataflow, generalized)
+"""
+from repro.kernels.aaq_matmul import aaq_linear, qtensor_matmul
+from repro.kernels.aaq_quant import aaq_quantize
+from repro.kernels.flash_attention import mha

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: dequantization-free quantized matmul (the RMPU).
+
+y[t, :] = sigma[t] * (q[t, :] @ W)  +  sum_j ovals[t, j] * W[oidx[t, j], :]
+
+Design notes (TPU adaptation of the RMPU, see DESIGN.md §2):
+  * INT4 inliers arrive nibble-packed (half the HBM traffic of INT8); they
+    are unpacked and widened in VMEM — the MXU consumes the widened block.
+  * The per-token scale multiplies the *accumulated* row once — LightNobel's
+    deferred dequantization. No f32 copy of the activation ever exists in HBM.
+  * Outliers are a rank-k correction (k <= 4): a VMEM gather of k weight rows
+    per token + a small FMA — compute proportional to k, exactly like the
+    ASIC's "16 x 4-bit units per outlier" sizing, not a dense second matmul.
+  * Grid: (T/block_t, D/block_d); the contraction dim H (= 128 in PPM) stays
+    whole per block — MXU-aligned and small enough that no H-tiling is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(inl_ref, scale_ref, ovals_ref, oidx_ref, w_ref, o_ref, *,
+                bits: int, k: int, out_dtype):
+    q = inl_ref[...]                                         # (BT, H or H/2)
+    if bits == 4:
+        lo = (q << 4) >> 4
+        hi = q >> 4
+        q = jnp.stack([lo, hi], axis=-1).reshape(q.shape[0], -1)
+    w = w_ref[...].astype(jnp.float32)                       # (H, BD)
+    acc = jax.lax.dot(q.astype(jnp.float32), w,
+                      preferred_element_type=jnp.float32)    # (BT, BD)
+    y = acc * scale_ref[...]                                 # deferred scale
+    if k > 0:
+        oidx = oidx_ref[...]                                 # (BT, K)
+        ovals = ovals_ref[...].astype(jnp.float32)           # (BT, K)
+        wo = jnp.take(w, oidx.reshape(-1), axis=0)           # (BT*K, BD)
+        wo = wo.reshape(*oidx.shape, -1)                     # (BT, K, BD)
+        y = y + jnp.einsum("tk,tkd->td", ovals, wo)
+    o_ref[...] = y.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_t", "block_d",
+                                             "out_dtype", "interpret"))
+def aaq_matmul_pallas(inliers, scales, ovals, oidx, w, *, bits: int,
+                      block_t: int = 256, block_d: int = 256,
+                      out_dtype=jnp.float32, interpret: bool = True):
+    t = inliers.shape[0]
+    h, d = w.shape
+    k = ovals.shape[-1]
+    bt, bd = min(block_t, t), min(block_d, d)
+    pad_t, pad_d = (-t) % bt, (-d) % bd
+    if pad_t:
+        inliers = jnp.pad(inliers, ((0, pad_t), (0, 0)))
+        scales = jnp.pad(scales, ((0, pad_t), (0, 0)))
+        ovals = jnp.pad(ovals, ((0, pad_t), (0, 0)))
+        oidx = jnp.pad(oidx, ((0, pad_t), (0, 0)))
+    if pad_d:
+        w = jnp.pad(w, ((0, 0), (0, pad_d)))
+    tp, dp = inliers.shape[0], w.shape[1]
+    hp = inliers.shape[1]                                    # H or H/2
+    kk = max(k, 1)
+    if k == 0:  # keep kernel arity fixed; dummy zero-width-safe operands
+        ovals = jnp.zeros((tp, 1), jnp.bfloat16)
+        oidx = jnp.zeros((tp, 1), jnp.int32)
+    kernel = functools.partial(_qmm_kernel, bits=bits, k=k,
+                               out_dtype=jnp.dtype(out_dtype))
+    y = pl.pallas_call(
+        kernel,
+        grid=(tp // bt, dp // bd),
+        in_specs=[
+            pl.BlockSpec((bt, hp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, dp), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(inliers, scales, ovals, oidx, w)
+    return y[:t, :d]

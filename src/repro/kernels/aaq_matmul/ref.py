@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the dequantization-free AAQ matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import unpack_int4
+
+
+def aaq_matmul_ref(inliers, scales, ovals, oidx, w, *, bits: int,
+                   out_dtype=jnp.float32):
+    """y = sigma * (q @ w) + sum_k ovals_k * w[oidx_k, :].
+
+    inliers (T,H or T,H/2 packed) int8; scales (T,1) f32; ovals (T,K) bf16;
+    oidx (T,K) int32; w (H,D).
+    """
+    q = unpack_int4(inliers) if bits == 4 else inliers
+    acc = jnp.dot(q.astype(jnp.float32), w.astype(jnp.float32))
+    y = acc * scales
+    if ovals.shape[-1]:
+        wo = jnp.take(w.astype(jnp.float32), oidx, axis=0)   # (T,K,D)
+        y = y + jnp.einsum("tk,tkd->td", ovals.astype(jnp.float32), wo)
+    return y.astype(out_dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.aaq_quant.ops import aaq_quantize

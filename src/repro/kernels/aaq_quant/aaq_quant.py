@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused token-wise AAQ runtime quantization.
+
+This is the ASIC VVPU's job mapped to the TPU VPU: one pass over a token
+block in VMEM does top-k outlier extraction, scale computation, rounding and
+INT4 nibble-packing — the activation never returns to HBM in high precision.
+
+Tiling: grid over token blocks of ``block_t`` tokens; the feature dim H
+(Hz = 128 in PPM — exactly one lane tile) stays whole inside the block, so
+each token's reduction (top-k, max) is a purely in-register affair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.qtensor import qmax
+
+EPS = 1e-12
+
+
+def _quant_kernel(x_ref, inl_ref, scale_ref, ovals_ref, oidx_ref, *,
+                  bits: int, k: int, h: int):
+    x = x_ref[...].astype(jnp.float32)                       # (BT, H)
+    if k > 0:
+        _, oidx = jax.lax.top_k(jnp.abs(x), k)               # (BT, k)
+        ovals = jnp.take_along_axis(x, oidx, axis=-1)
+        onehot = jnp.any(oidx[..., None] ==
+                         jax.lax.broadcasted_iota(jnp.int32, (1, 1, h), 2),
+                         axis=1)                              # (BT, H)
+        inl = jnp.where(onehot, 0.0, x)
+        ovals_ref[...] = ovals.astype(jnp.bfloat16)
+        oidx_ref[...] = oidx.astype(jnp.int32)
+    else:
+        inl = x
+        ovals_ref[...] = jnp.zeros(ovals_ref.shape, jnp.bfloat16)
+        oidx_ref[...] = jnp.zeros(oidx_ref.shape, jnp.int32)
+    m = jnp.max(jnp.abs(inl), axis=-1, keepdims=True)
+    scale = jnp.maximum(m / qmax(bits), EPS)
+    q = jnp.clip(jnp.round(inl / scale), -qmax(bits), qmax(bits)).astype(jnp.int8)
+    if bits == 4:
+        lo = q[:, 0::2] & 0x0F
+        hi = (q[:, 1::2] & 0x0F) << 4
+        q = (lo | hi).astype(jnp.int8)
+    inl_ref[...] = q
+    scale_ref[...] = scale
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "k_outliers", "block_t", "interpret"))
+def aaq_quantize_pallas(x: jax.Array, *, bits: int, k_outliers: int,
+                        block_t: int = 256, interpret: bool = True):
+    """x (T, H) -> (inliers, scales, ovals, oidx); T % block_t == 0 padding
+    is handled here so callers can pass any T."""
+    t, h = x.shape
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    tp = x.shape[0]
+    grid = (tp // bt,)
+    h_out = h // 2 if bits == 4 else h
+    kernel = functools.partial(_quant_kernel, bits=bits, k=k_outliers, h=h)
+    out_shape = [
+        jax.ShapeDtypeStruct((tp, h_out), jnp.int8),
+        jax.ShapeDtypeStruct((tp, 1), jnp.float32),
+        jax.ShapeDtypeStruct((tp, max(k_outliers, 1)), jnp.bfloat16),
+        jax.ShapeDtypeStruct((tp, max(k_outliers, 1)), jnp.int32),
+    ]
+    out_specs = [
+        pl.BlockSpec((bt, h_out), lambda i: (i, 0)),
+        pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        pl.BlockSpec((bt, max(k_outliers, 1)), lambda i: (i, 0)),
+        pl.BlockSpec((bt, max(k_outliers, 1)), lambda i: (i, 0)),
+    ]
+    inl, scales, ovals, oidx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, h), lambda i: (i, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x)
+    inl, scales = inl[:t], scales[:t]
+    ovals, oidx = ovals[:t, :k_outliers], oidx[:t, :k_outliers]
+    return inl, scales, ovals, oidx

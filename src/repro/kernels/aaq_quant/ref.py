@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused AAQ runtime-quantization kernel.
+
+Returns plain arrays (not the QTensor pytree) so the kernel and oracle have
+identical signatures:  x (T, H)  ->  (inliers, scales, ovals, oidx).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import pack_int4, qmax
+
+EPS = 1e-12
+
+
+def aaq_quantize_ref(x: jax.Array, bits: int, k_outliers: int):
+    """Token-wise symmetric quantization with top-k outlier split.
+
+    x: (T, H) float.  Returns:
+      inliers: int8 (T, H) for 8-bit / (T, H//2) nibble-packed for 4-bit
+      scales:  f32 (T, 1)
+      ovals:   bf16 (T, k)
+      oidx:    int32 (T, k)
+    """
+    t, h = x.shape
+    xf = x.astype(jnp.float32)
+    if k_outliers > 0:
+        _, oidx = jax.lax.top_k(jnp.abs(xf), k_outliers)
+        ovals = jnp.take_along_axis(xf, oidx, axis=-1)
+        onehot = jnp.any(oidx[..., None] == jnp.arange(h)[None, None, :], axis=1)
+        inl = jnp.where(onehot, 0.0, xf)
+    else:
+        oidx = jnp.zeros((t, 0), jnp.int32)
+        ovals = jnp.zeros((t, 0), jnp.float32)
+        inl = xf
+    m = jnp.max(jnp.abs(inl), axis=-1, keepdims=True)
+    scales = jnp.maximum(m / qmax(bits), EPS)
+    q = jnp.clip(jnp.round(inl / scales), -qmax(bits), qmax(bits)).astype(jnp.int8)
+    if bits == 4:
+        q = pack_int4(q)
+    return q, scales, ovals.astype(jnp.bfloat16), oidx.astype(jnp.int32)

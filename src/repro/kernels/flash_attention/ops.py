@@ -1,0 +1,24 @@
+"""Public attention op: kernel-backed token-wise MHA with jnp fallback.
+
+Models call ``mha(...)``; ``use_kernel`` selects the Pallas path (TPU target,
+validated in interpret mode) vs the XLA-fused jnp path (CPU-fast, used for
+dry-run lowering).  Same semantics either way — the tests assert it.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_mha_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def mha(q, k, v, *, bias=None, causal=False, window=None, kv_valid_len=None,
+        softmax_scale=None, use_kernel=False, interpret=True,
+        block_q=128, block_k=128):
+    if use_kernel:
+        return flash_mha_pallas(
+            q, k, v, bias, kv_valid_len, causal=causal, window=window,
+            softmax_scale=softmax_scale, block_q=block_q, block_k=block_k,
+            interpret=interpret)
+    return mha_ref(q, k, v, bias=bias, causal=causal, window=window,
+                   kv_valid_len=kv_valid_len, softmax_scale=softmax_scale)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for the token-wise MHA (flash attention) kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def mha_ref(q, k, v, *, bias=None, causal=False, window=None,
+            kv_valid_len=None, softmax_scale=None):
+    """Masked multi-head attention, materializing the score tensor.
+
+    q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D) with Hq % Hkv == 0 (GQA);
+    bias (Bb,Hq,Sq,Skv) with B % Bb == 0; kv_valid_len (B,) int32.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / jnp.sqrt(d)
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vx = jnp.repeat(v, group, axis=2) if group > 1 else v
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    if bias is not None:
+        rep = b // bias.shape[0]
+        if rep > 1:   # broadcast (fusable), never materialize the repeat
+            bias = jnp.broadcast_to(bias[None], (rep, *bias.shape)).reshape(
+                b, *bias.shape[1:])
+        s = s + bias.astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, NEG)
+    if kv_valid_len is not None:
+        valid = kpos[None] < kv_valid_len[:, None, None]     # (B,1,Skv)
+        s = jnp.where(valid[:, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def mha_chunked(q, k, v, *, bias=None, causal=False, window=None,
+                kv_valid_len=None, softmax_scale=None, q_chunk=512):
+    """Query-chunked attention: same semantics as :func:`mha_ref` but the
+    score tensor is only ever (B, H, q_chunk, Skv) — LightNobel's token-wise
+    MHA memory discipline expressed at the XLA level (the Pallas kernel is
+    the TPU-fused version; this is what full-seq forward passes lower)."""
+    b, sq, hq, d = q.shape
+    if sq <= q_chunk or sq % q_chunk:
+        return mha_ref(q, k, v, bias=bias, causal=causal, window=window,
+                       kv_valid_len=kv_valid_len, softmax_scale=softmax_scale)
+    _, skv, hkv, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / jnp.sqrt(d)
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vx = jnp.repeat(v, group, axis=2) if group > 1 else v
+    nc = sq // q_chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, q_chunk, hq, d), 1, 0)
+    bc = None
+    if bias is not None:
+        bc = jnp.moveaxis(
+            bias.reshape(bias.shape[0], hq, nc, q_chunk, skv), 2, 0)
+    kpos = jnp.arange(skv)[None, :]
+
+    def one(ci, args):
+        qq = args[0]
+        bb = args[1] if bias is not None else None
+        s = jnp.einsum("bqhd,bkhd->bhqk", qq.astype(jnp.float32),
+                       kx.astype(jnp.float32)) * scale
+        if bb is not None:
+            rep = b // bb.shape[0]
+            if rep > 1:
+                bb = jnp.broadcast_to(bb[None], (rep, *bb.shape)).reshape(
+                    b, *bb.shape[1:])
+            s = s + bb.astype(jnp.float32)
+        qpos = ci * q_chunk + jnp.arange(q_chunk)[:, None]
+        ok = jnp.ones((q_chunk, skv), bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok[None, None], s, NEG)
+        if kv_valid_len is not None:
+            valid = kpos[None] < kv_valid_len[:, None, None]
+            s = jnp.where(valid[:, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32))
+
+    idx = jnp.arange(nc)
+    args = (qc, bc) if bias is not None else (qc,)
+    oc = jax.lax.map(lambda a: one(a[0], a[1:]), (idx, *args))
+    dv = vx.shape[-1]                       # MLA: d_v may differ from d_qk
+    o = jnp.moveaxis(oc, 0, 1).reshape(b, sq, hq, dv)
+    return o.astype(q.dtype)

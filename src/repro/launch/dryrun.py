@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against the production mesh, then extract memory / cost / collective
+analysis for the roofline tables.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun.jsonl
+
+The XLA host-device flag above MUST precede every other import (jax locks
+the device count at first init); nothing else in the repo sets it globally.
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_NAMES, cell_supported, get_config,
+                           get_ppm_config, shapes_for)
+from repro.configs.base import ShapeSpec
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_fold_step, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel import sharding as sh
+from repro.core.policy import AAQConfig, DISABLED
+
+
+def count_params_from_sds(tree) -> int:
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(tree))
+
+
+def ppm_model_flops(cfg, ns: int) -> float:
+    """Analytic useful FLOPs of one PPM forward: pair-dataflow MACs (the
+    Ns^2/Ns^3 terms, from the same accounting the Fig-16a bench uses) plus
+    the sequence-track MACs; 2 FLOPs per MAC."""
+    from benchmarks.compute_cost import block_macs
+    pair = sum(m for _, m in block_macs(cfg, ns))
+    hm, f = cfg.hm, cfg.transition_factor
+    seq = (4 * ns * hm * hm + 2 * ns * ns * hm          # seq attn + scores
+           + 2 * ns * hm * f * hm                        # transition
+           + ns * hm * 64 + ns * ns * 64 * cfg.hz)       # opm
+    return 2.0 * cfg.blocks * (pair + seq) * cfg.recycles
+
+
+def active_params(cfg, n_params: int) -> float:
+    """MoE: parameters touched per token (top-k of routed experts)."""
+    if getattr(cfg, "moe", None):
+        moe = cfg.moe
+        expert_p = 3 * cfg.d_model * moe.expert_ff          # glu expert
+        inactive = (moe.n_experts - moe.top_k) * expert_p * (
+            cfg.layers - (1 if moe.dense_first_layer_ff else 0))
+        return n_params - inactive
+    return float(n_params)
+
+
+def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
+               aaq: AAQConfig = DISABLED, quantized_kv: bool = False):
+    """Lower + compile one cell; returns the record dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape.name, "step": shape.step,
+           "mesh": "multi" if multi_pod else "single", "chips": chips}
+    t0 = time.time()
+
+    if arch == "esmfold_ppm":
+        cfg = get_ppm_config()
+        from repro.models.ppm import init_ppm
+        params_sds = jax.eval_shape(partial(init_ppm, cfg=cfg),
+                                    jax.random.PRNGKey(0))
+        n_params = count_params_from_sds(params_sds)
+        in_sds = {"aatype": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        param_sh = sh.param_shardings(params_sds, mesh, None)
+        batch_sh = sh.to_shardings(mesh, sh.ppm_input_shardings(mesh))
+        from repro.core.schemes import AAQScheme, FP16Baseline
+        scheme = AAQScheme(cfg=aaq) if aaq.enabled else FP16Baseline()
+        step_fn = make_fold_step(cfg, scheme)
+        with mesh, sh.act_rules(sh.default_act_rules(mesh, "train")):
+            lowered = jax.jit(step_fn,
+                              in_shardings=(param_sh, batch_sh["aatype"]),
+                              ).lower(params_sds, in_sds["aatype"])
+            compiled = lowered.compile()
+        model_flops = ppm_model_flops(cfg, shape.seq_len) * shape.global_batch
+    else:
+        cfg = get_config(arch)
+        params_sds = lm.param_specs(cfg)
+        n_params = count_params_from_sds(params_sds)
+        qkv = quantized_kv and shape.step == "decode" and \
+            cfg.kind in ("dense", "vlm")
+        rec["quantized_kv"] = qkv
+        in_specs = lm.input_specs(cfg, shape, quantized_kv=qkv)
+        param_sh = sh.param_shardings(params_sds, mesh, cfg)
+        spec_tree = sh.batch_specs(cfg, shape, mesh, quantized_kv=qkv)
+        shardings = sh.to_shardings(mesh, spec_tree)
+        rules = sh.default_act_rules(mesh, shape.step, cfg)
+        if shape.step == "decode":
+            specs = sh.cache_specs(cfg, shape, mesh)
+            if "k" in specs:                    # dense-style KV cache archs
+                from jax.sharding import PartitionSpec as _P
+                rules["kv_cache"] = _P(*specs["k"][1:])  # per-layer view
+        with mesh, sh.act_rules(rules):
+            if shape.step == "train":
+                opt_sds = jax.eval_shape(adamw.init, params_sds)
+                opt_sh = sh.opt_state_shardings(param_sh, mesh)
+                step_fn = make_train_step(cfg, aaq=aaq)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(param_sh, opt_sh, shardings["batch"]),
+                    donate_argnums=(0, 1),
+                ).lower(params_sds, opt_sds, in_specs["batch"])
+            elif shape.step == "prefill":
+                step_fn = make_prefill_step(cfg, aaq=aaq)
+                lowered = jax.jit(
+                    step_fn, in_shardings=(param_sh, shardings["batch"]),
+                ).lower(params_sds, in_specs["batch"])
+            else:  # decode
+                step_fn = make_serve_step(cfg, aaq=aaq)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(param_sh, shardings["batch"],
+                                  shardings["cache"]),
+                    donate_argnums=(2,),
+                ).lower(params_sds, in_specs["batch"], in_specs["cache"])
+            compiled = lowered.compile()
+        tokens = shape.global_batch * (shape.seq_len if shape.step != "decode"
+                                       else 1)
+        model_flops = ha.model_flops_estimate(
+            n_params, tokens, shape.step,
+            n_active=active_params(cfg, n_params))
+
+    rec["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    rec["mem"] = {
+        "argument_bytes_per_dev": int(mem.argument_size_in_bytes),
+        "output_bytes_per_dev": int(mem.output_size_in_bytes),
+        "temp_bytes_per_dev": int(mem.temp_size_in_bytes),
+        "alias_bytes_per_dev": int(mem.alias_size_in_bytes),
+    }
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec["mem"]["peak_bytes_per_dev"] = int(peak)
+    rec["fits_hbm_16g"] = bool(peak < 16e9)
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mc = ha.analyze_hlo(compiled.as_text())
+    rl = ha.roofline_from_module(mc, chips, model_flops)
+    rec["cost"] = {
+        "flops_per_dev": mc.flops, "bytes_per_dev": mc.bytes,
+        # XLA's own numbers (loop bodies counted once) as a cross-check:
+        "xla_flops_loop_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_loop_once": float(cost.get("bytes accessed", 0.0)),
+    }
+    rec["collectives"] = {"per_device_bytes": mc.coll,
+                          "counts": mc.coll_counts,
+                          "loops": mc.loops[:20]}
+    rec["roofline"] = {
+        "t_compute_s": rl.t_compute, "t_memory_s": rl.t_memory,
+        "t_collective_s": rl.t_collective, "bottleneck": rl.bottleneck,
+        "model_flops": model_flops, "hlo_flops_global": rl.flops_global,
+        "useful_fraction": (model_flops / rl.flops_global
+                            if rl.flops_global else 0.0),
+        "roofline_fraction": rl.roofline_fraction,
+    }
+    rec["n_params"] = n_params
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", action="store_true",
+                    help="enable AAQ in the lowered dataflow")
+    ap.add_argument("--quant-kv", action="store_true",
+                    help="decode cells use the INT8 AAQ KV cache")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) + ["esmfold_ppm"] if args.all else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    aaq = AAQConfig(enabled=True) if args.quant else DISABLED
+
+    rows = []
+    out_f = None
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        out_f = open(args.out, "a")
+
+    def record(r):
+        rows.append(r)
+        if out_f:
+            out_f.write(json.dumps(r) + "\n")
+            out_f.flush()
+
+    for arch in archs:
+        cfg = get_config(arch) if arch != "esmfold_ppm" else get_ppm_config()
+        for shape in shapes_for(arch):
+            if args.shape and shape.name != args.shape:
+                continue
+            ok, reason = cell_supported(cfg, shape)
+            for mp in meshes:
+                tag = f"{arch} x {shape.name} x {'multi' if mp else 'single'}"
+                if not ok:
+                    record({"arch": arch, "shape": shape.name,
+                            "mesh": "multi" if mp else "single",
+                            "skipped": reason})
+                    print(f"[skip] {tag}: {reason}", flush=True)
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, mp, aaq=aaq,
+                                     quantized_kv=args.quant_kv)
+                    r = rec["roofline"]
+                    print(f"[ok]   {tag}: peak/dev="
+                          f"{rec['mem']['peak_bytes_per_dev']/1e9:.2f}GB "
+                          f"t=(c {r['t_compute_s']:.3e}, m {r['t_memory_s']:.3e}, "
+                          f"l {r['t_collective_s']:.3e}) "
+                          f"bound={r['bottleneck']} "
+                          f"compile={rec['compile_s']}s", flush=True)
+                    record(rec)
+                except Exception as e:
+                    traceback.print_exc()
+                    record({"arch": arch, "shape": shape.name,
+                            "mesh": "multi" if mp else "single",
+                            "error": str(e)[:500]})
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+    if out_f:
+        out_f.close()
+    n_fail = sum(1 for r in rows if "error" in r)
+    print(f"done: {len(rows)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

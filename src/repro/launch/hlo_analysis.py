@@ -1,0 +1,391 @@
+"""Post-compile HLO analysis: loop-aware FLOPs / bytes / collective traffic
++ roofline terms.
+
+Why not just ``compiled.cost_analysis()``: XLA's cost analysis counts a
+while-loop body ONCE, but every scanned structure here (layers, gradient-
+accumulation microbatches, xent chunks, attention q-chunks, SSD state scans)
+is a while loop — flops would be understated by the trip count (56x for a
+mixtral layer stack).  This module parses the *optimized per-device HLO*,
+builds a per-computation cost table, reads each loop's trip count from its
+condition computation, and accumulates recursively:
+
+    cost(comp) = own_ops + sum_fusions cost(called)
+               + sum_whiles trip * (cost(body) + cost(cond))
+
+Costs tracked per computation:
+  * dot FLOPs (2 x result_elems x contraction size, from the symbol table)
+  * HBM bytes (operands + results of top-level compute ops; fusion
+    internals excluded — they live in registers/VMEM)
+  * collective bytes by kind, with ring traffic factors:
+        all-reduce 2(g-1)/g | all-gather (g-1)/g (result) |
+        reduce-scatter (g-1) (result) | all-to-all (g-1)/g | permute 1
+
+All quantities are per-device (the module is the SPMD program); roofline
+terms scale by device count so the assignment's global formulas hold.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\) -> .* \{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT )?%([\w\.\-]+) = ([\w\[\],\{\}\s]+?)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "after-all", "partition-id", "replica-id", "iota",
+    "get-dimension-size", "custom-call", "copy-start", "copy-done",
+    # view-like / loop-plumbing ops: fused or elided on the TPU target
+    "copy", "broadcast", "reshape",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[float, float]:
+    """total elements and bytes across all array parts of a type string."""
+    elems = bytes_ = 0.0
+    for ty, dims in _SHAPE.findall(type_str):
+        if ty not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[ty]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    # (kind, callee) edges: fusions multiplicity 1, whiles trip count
+    calls: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+    max_const: int = 0
+
+
+def _parse_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line.strip()) if line and not line.startswith(" ") else None
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and line.strip():
+            comps[cur].append(line)
+    return comps
+
+
+def _operand_names(line: str, op: str | None = None) -> list[str]:
+    """Operand instruction names from the argument list of ``op(...)``."""
+    start = 0
+    if op is not None:
+        idx = line.find(f" {op}(")
+        if idx >= 0:
+            start = idx + len(op) + 1
+    m = _OPERANDS.search(line[start:])
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip().split(" ")[-1]
+        if tok.startswith("%"):
+            names.append(tok[1:])
+    return names
+
+
+def _sliced_params(lines: list[str]) -> dict[int, str]:
+    """For a fused computation: parameter index -> result type of the
+    dynamic-slice/slice/gather that consumes it (if any).
+
+    Scan bodies slice per-layer views out of stacked buffers and XLA fuses
+    the slice into consumers; charging the fusion's full stacked operand per
+    iteration would overcount HBM traffic by the layer count squared."""
+    param_names: dict[str, int] = {}
+    out: dict[int, str] = {}
+    for line in lines:
+        m = re.match(r"^\s*(?:ROOT )?%([\w\.\-]+) = ([\w\[\],\{\}\s]+?)\s+parameter\((\d+)\)", line)
+        if m:
+            param_names[m.group(1)] = int(m.group(3))
+    for line in lines:
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        ty, op = mi.group(2).strip(), mi.group(3)
+        if op in ("dynamic-slice", "slice", "gather"):
+            ops_ = _operand_names(line, op)
+            if ops_ and ops_[0] in param_names:
+                out[param_names[ops_[0]]] = ty
+    return out
+
+
+def _analyze_comp(lines: list[str],
+                  all_comps: dict[str, list[str]] | None = None) -> CompCost:
+    cost = CompCost()
+    symtab: dict[str, str] = {}
+    for line in lines:
+        mi = _INSTR.match(line)
+        if not mi:
+            # tuple-typed defs like `%x = (f32[..], ..) op(...)`
+            mt = re.match(r"^\s*(?:ROOT )?%([\w\.\-]+) = (\(.*?\))\s+([\w\-]+)\(", line)
+            if not mt:
+                continue
+            name, type_str, op = mt.group(1), mt.group(2), mt.group(3)
+        else:
+            name, type_str, op = mi.group(1), mi.group(2).strip(), mi.group(3)
+        symtab[name] = type_str
+
+        for mc in _CONST_INT.finditer(line):
+            cost.max_const = max(cost.max_const, int(mc.group(1)))
+
+        if op == "dot":
+            elems, bts = _shape_elems_bytes(type_str)
+            ops_ = _operand_names(line, "dot")
+            cdim = 1.0
+            mctr = _CONTRACT.search(line)
+            if ops_ and mctr is not None and ops_[0] in symtab:
+                lhs_dims = _SHAPE.search(symtab[ops_[0]])
+                if lhs_dims:
+                    dims = [int(d) for d in lhs_dims.group(2).split(",") if d]
+                    for ci in mctr.group(1).split(","):
+                        if ci != "" and int(ci) < len(dims):
+                            cdim *= dims[int(ci)]
+            cost.flops += 2.0 * elems * cdim
+            cost.bytes += bts
+            for o in ops_:
+                cost.bytes += _shape_elems_bytes(symtab.get(o, ""))[1]
+        elif op in ("convolution",):
+            elems, bts = _shape_elems_bytes(type_str)
+            cost.flops += 2.0 * elems * 128          # conservative stub
+            cost.bytes += bts
+        elif op == "fusion":
+            mcalls = _CALLS.search(line)
+            sliced: dict[int, str] = {}
+            if mcalls:
+                cost.calls.append(("FUSION:" + mcalls.group(1), 1.0))
+                if all_comps and mcalls.group(1) in all_comps:
+                    sliced = _sliced_params(all_comps[mcalls.group(1)])
+            _, bts = _shape_elems_bytes(type_str)
+            cost.bytes += bts
+            for i, o in enumerate(_operand_names(line, "fusion")):
+                if i in sliced:     # slice-fed operand: charge the slice
+                    cost.bytes += _shape_elems_bytes(sliced[i])[1]
+                else:
+                    cost.bytes += _shape_elems_bytes(symtab.get(o, ""))[1]
+        elif op == "while":
+            mb, mc2 = _BODY.search(line), _COND.search(line)
+            if mb:
+                cost.calls.append(("WHILE:" + mb.group(1) + "|"
+                                   + (mc2.group(1) if mc2 else ""), 0.0))
+        elif op in ("call", "conditional"):
+            for mcall in re.finditer(r"%([\w\.\-]+)", line.split("(")[0]):
+                pass
+            mcalls = _TO_APPLY.search(line) or _CALLS.search(line)
+            if mcalls:
+                cost.calls.append((mcalls.group(1), 1.0))
+        elif any(op.startswith(c) for c in _COLLECTIVES):
+            kind = next(c for c in _COLLECTIVES if op.startswith(c))
+            _, size = _shape_elems_bytes(type_str)
+            g = 1
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = int(gm.group(2))
+            if g <= 1 and kind != "collective-permute":
+                continue
+            traffic = {"all-reduce": 2.0 * (g - 1) / g * size,
+                       "all-gather": (g - 1) / g * size,
+                       "reduce-scatter": (g - 1) * size,
+                       "all-to-all": (g - 1) / g * size,
+                       "collective-permute": size}[kind]
+            cost.coll[kind] = cost.coll.get(kind, 0.0) + traffic
+            cost.coll_counts[kind] = cost.coll_counts.get(kind, 0) + 1
+            cost.bytes += size + sum(_shape_elems_bytes(symtab.get(o, ""))[1]
+                                     for o in _operand_names(line, op))
+        elif op in ("dynamic-slice", "slice", "gather"):
+            # traffic = the slice actually moved, not the sliced-into buffer
+            cost.bytes += 2.0 * _shape_elems_bytes(type_str)[1]
+        elif op == "dynamic-update-slice":
+            ops_ = _operand_names(line, op)
+            upd = ops_[1] if len(ops_) > 1 else ""
+            cost.bytes += 2.0 * _shape_elems_bytes(symtab.get(upd, ""))[1]
+        elif op == "scatter":
+            ops_ = _operand_names(line, op)
+            upd = ops_[-1] if ops_ else ""
+            cost.bytes += 2.0 * _shape_elems_bytes(symtab.get(upd, ""))[1]
+        elif op not in _SKIP_BYTES_OPS:
+            _, bts = _shape_elems_bytes(type_str)
+            cost.bytes += bts
+            for o in _operand_names(line, op):
+                cost.bytes += _shape_elems_bytes(symtab.get(o, ""))[1]
+    return cost
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    bytes: float
+    coll: dict[str, float]
+    coll_counts: dict[str, float]
+    loops: list[tuple[str, int]]
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze_hlo(text: str, entry: str | None = None) -> ModuleCost:
+    comps = _parse_computations(text)
+    costs = {name: _analyze_comp(lines, comps) for name, lines in comps.items()}
+    loops: list[tuple[str, int]] = []
+    memo: dict[str, tuple[float, float, dict, dict]] = {}
+
+    def total(name: str, depth=0) -> tuple[float, float, dict, dict]:
+        if name in memo:
+            return memo[name]
+        c = costs.get(name)
+        if c is None or depth > 50:
+            return (0.0, 0.0, {}, {})
+        fl, bt = c.flops, c.bytes
+        cl = dict(c.coll)
+        cc = {k: float(v) for k, v in c.coll_counts.items()}
+        for callee, mult in c.calls:
+            if callee.startswith("WHILE:"):
+                body, cond = callee[6:].split("|")
+                trip = max(costs.get(cond, CompCost()).max_const, 1)
+                loops.append((body, trip))
+                for sub in (body, cond):
+                    sfl, sbt, scl, scc = total(sub, depth + 1)
+                    fl += trip * sfl
+                    bt += trip * sbt
+                    for k, v in scl.items():
+                        cl[k] = cl.get(k, 0.0) + trip * v
+                    for k, v in scc.items():
+                        cc[k] = cc.get(k, 0.0) + trip * v
+            elif callee.startswith("FUSION:"):
+                # fusion internals: flops/collectives count, bytes do NOT
+                # (the fusion op's own operands/result carry the HBM traffic)
+                sfl, _, scl, scc = total(callee[7:], depth + 1)
+                fl += mult * sfl
+                for k, v in scl.items():
+                    cl[k] = cl.get(k, 0.0) + v
+                for k, v in scc.items():
+                    cc[k] = cc.get(k, 0.0) + v
+            else:
+                sfl, sbt, scl, scc = total(callee, depth + 1)
+                fl += mult * sfl
+                bt += mult * sbt
+                for k, v in scl.items():
+                    cl[k] = cl.get(k, 0.0) + v
+                for k, v in scc.items():
+                    cc[k] = cc.get(k, 0.0) + v
+        memo[name] = (fl, bt, cl, cc)
+        return memo[name]
+
+    # entry computation: the one never called by others, or named 'main'
+    called = set()
+    for c in costs.values():
+        for callee, _ in c.calls:
+            if callee.startswith("WHILE:"):
+                body, cond = callee[6:].split("|")
+                called.update({body, cond})
+            elif callee.startswith("FUSION:"):
+                called.add(callee[7:])
+            else:
+                called.add(callee)
+    entries = [n for n in costs if n not in called and "main" in n] or \
+              [n for n in costs if n not in called]
+    fl = bt = 0.0
+    cl: dict[str, float] = {}
+    cc: dict[str, float] = {}
+    for e in entries:
+        efl, ebt, ecl, ecc = total(e)
+        fl += efl
+        bt += ebt
+        for k, v in ecl.items():
+            cl[k] = cl.get(k, 0.0) + v
+        for k, v in ecc.items():
+            cc[k] = cc.get(k, 0.0) + v
+    return ModuleCost(fl, bt, cl, cc, loops)
+
+
+# --------------------------------------------------------------------------
+# roofline
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """time the useful math would take at peak / time the binding
+        roofline term takes = achievable MFU given this lowering."""
+        if self.t_total <= 0 or self.model_flops <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / self.t_total
+
+
+def roofline_from_module(mc: ModuleCost, chips: int,
+                         model_flops: float = 0.0,
+                         links_per_chip: float = 1.0) -> Roofline:
+    fl = mc.flops * chips
+    by = mc.bytes * chips
+    cb = mc.coll_bytes * chips
+    t_c = fl / (chips * PEAK_FLOPS)
+    t_m = by / (chips * HBM_BW)
+    t_l = cb / (chips * LINK_BW * links_per_chip)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    return Roofline(fl, by, cb, chips, t_c, t_m, t_l,
+                    bottleneck=max(terms, key=terms.get),
+                    model_flops=model_flops)
+
+
+def model_flops_estimate(n_params: float, tokens: float, step: str,
+                         n_active: float | None = None) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference); MoE uses N_active."""
+    n = n_active if n_active is not None else n_params
+    return (6.0 if step == "train" else 2.0) * n * tokens

@@ -1,0 +1,29 @@
+"""Production meshes. Functions, not module constants — importing this module
+never touches jax device state (dry-run sets the 512-device XLA flag first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis rides
+    the slow inter-pod links (DCN) — DP or pipeline stages go there."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic re-meshing."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int | None = None):
+    """Mesh over whatever devices exist (CPU tests: 1..8 host devices)."""
+    n = len(jax.devices())
+    model = model or 1
+    assert n % model == 0
+    return make_mesh((n // model, model), ("data", "model"))

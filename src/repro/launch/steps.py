@@ -1,0 +1,101 @@
+"""Step functions: the jitted units the launcher / dry-run lower.
+
+    train_step(params, opt_state, batch)  -> (params', opt_state', metrics)
+    prefill_step(params, batch)           -> logits
+    serve_step(params, batch, cache)      -> (logits, cache')
+    fold_step(params, aatype)             -> coords/distogram   (PPM)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.policy import AAQConfig, DISABLED
+from repro.core.schemes import FP16Baseline, QuantScheme
+from repro.models import lm
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig | None = None,
+                    aaq: AAQConfig = DISABLED, remat: bool = True,
+                    microbatches: int | None = None, grad_compress=None,
+                    grad_shardings=None):
+    """One optimizer step. ``microbatches > 1`` = gradient accumulation via
+    lax.scan (activation memory / microbatches; the production fit lever).
+    ``grad_compress`` optionally wraps grads (AAQ error-feedback compression
+    before the cross-pod reduction — see optim/grad_compress.py).
+    ``grad_shardings``: param-sharding pytree; per-microbatch grads are
+    constrained to it so XLA keeps partial sums sharded (reduce-scatter
+    semantics) instead of all-reducing every microbatch (§Perf M3)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    n_micro = microbatches or cfg.train_microbatches
+
+    def loss_of(params, batch):
+        return lm.loss_fn(params, batch, cfg, aaq=aaq, remat=remat)
+
+    def constrain_g(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            def acc(carry, mbatch):
+                lsum, gsum = carry
+                loss, grads = jax.value_and_grad(loss_of)(params, mbatch)
+                grads = constrain_g(grads)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (lsum + loss, constrain_g(gsum)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (lsum, gsum), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+            loss = lsum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        if grad_compress is not None:
+            grads = grad_compress(grads)
+        lr_scale = warmup_cosine(opt_state["step"])
+        params, opt_state, metrics = adamw.update(params, grads, opt_state,
+                                                  opt_cfg, lr_scale)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, aaq: AAQConfig = DISABLED):
+    def prefill_step(params, batch):
+        return lm.prefill_fn(params, batch, cfg, aaq=aaq)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, aaq: AAQConfig = DISABLED):
+    def serve_step(params, batch, cache):
+        return lm.decode_fn(params, batch, cache, cfg, aaq=aaq)
+    return serve_step
+
+
+def make_fold_step(cfg, scheme: QuantScheme | None = None,
+                   mesh=None, constraints=None):
+    """PPM inference step (the paper's workload). ``constraints`` optionally
+    applies pair/seq sharding annotations inside the forward."""
+    from repro.models.ppm import ppm_forward
+
+    def fold_step(params, aatype):
+        out = ppm_forward(params, aatype, cfg, scheme or FP16Baseline())
+        return {"coords": out["coords"], "distogram": out["distogram"]}
+
+    return fold_step

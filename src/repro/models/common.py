@@ -1,0 +1,135 @@
+"""Shared functional building blocks for every model in the zoo.
+
+Params are plain nested dicts (pytree-native: shardable, checkpointable,
+scan-stackable).  Every init function takes an explicit PRNG key; every apply
+function is pure.  No framework dependency — jax.numpy all the way down.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_zero_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                    dtype=jnp.float32) -> Params:
+    """Zero-init (AF2 uses this for gating/output projections)."""
+    p = {"w": jnp.zeros((d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def ln_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def rms_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> Params:
+    return {"e": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+def dense(p: Params, x: jax.Array, scheme=None, site: str = "") -> jax.Array:
+    """Linear layer routed through the active quantization scheme."""
+    if scheme is not None:
+        return scheme.linear(x, p["w"].astype(x.dtype), p.get("b"), site)
+    y = jnp.dot(x, p["w"].astype(x.dtype), preferred_element_type=jnp.float32)
+    y = y.astype(x.dtype)
+    return y if "b" not in p else y + p["b"].astype(x.dtype)
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["e"], ids, axis=0)
+
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               rotary_frac: float = 1.0) -> jax.Array:
+    rot_dim = int(head_dim * rotary_frac)
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_frac: float = 1.0) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    ``rotary_frac < 1`` rotates only the leading fraction of the head dim
+    (ChatGLM-style '2D' partial rotary)."""
+    d = x.shape[-1]
+    rot = int(d * rotary_frac)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+    ang = positions[..., None].astype(jnp.float32) * inv        # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1, o2 = x1 * cos - x2 * sin, x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(*x1.shape[:-1], rot)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1) if rot < d else out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention masks
+# --------------------------------------------------------------------------
+NEG_INF = -1e9
+
+
+def causal_mask(q_len: int, kv_len: int, *, window: int | None = None,
+                q_offset: int | jax.Array = 0) -> jax.Array:
+    """(q_len, kv_len) additive mask. ``window`` = sliding-window attention."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def count_params(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))

@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed (B, n_frames, d_model) frame embeddings (the output the two conv
+layers would produce).  Encoder = bidirectional attention; decoder = causal
+self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import AAQConfig, DISABLED
+from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+Params = dict[str, Any]
+
+
+def init_cross_attn(key, cfg: ArchConfig) -> Params:
+    return tf.init_attn(key, cfg)
+
+
+def init_enc_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"attn_norm": cm.ln_init(cfg.d_model, cfg.np_dtype),
+            "attn": tf.init_attn(k1, cfg),
+            "mlp_norm": cm.ln_init(cfg.d_model, cfg.np_dtype),
+            "mlp": tf.init_mlp(k2, cfg)}
+
+
+def init_dec_block(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = init_enc_block(k1, cfg)
+    p["cross_norm"] = cm.ln_init(cfg.d_model, cfg.np_dtype)
+    p["cross"] = init_cross_attn(k3, cfg)
+    return p
+
+
+def init_encdec(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = cfg.np_dtype
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.layers)
+    return {
+        "embed": cm.embed_init(ks[2], cfg.vocab, cfg.d_model, dt),
+        "pos_dec": cm.embed_init(ks[3], cfg.max_seq, cfg.d_model, dt),
+        "enc_blocks": [init_enc_block(k, cfg) for k in enc_keys],
+        "enc_norm": cm.ln_init(cfg.d_model, dt),
+        "dec_blocks": [init_dec_block(k, cfg) for k in dec_keys],
+        "final_norm": cm.ln_init(cfg.d_model, dt),
+    }
+
+
+def _sinusoid(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None].astype(jnp.float32)
+    ang = pos / (10000.0 ** (dim / (d // 2)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _self_attn(p, x, cfg, causal, cache=None, positions=None,
+               aaq: AAQConfig = DISABLED):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = cm.dense(p["q"], x).reshape(b, s, hq, hd)
+    k = cm.dense(p["k"], x).reshape(b, s, hkv, hd)
+    v = cm.dense(p["v"], x).reshape(b, s, hkv, hd)
+    k = aaq.act(k, "lm.kv_cache")
+    v = aaq.act(v, "lm.kv_cache")
+    if cache is None:
+        o = mha_chunked(q, k, v, causal=causal)
+        nc = None
+    else:
+        w = cache["k"].shape[1]
+        pos = positions[0, 0] if positions is not None else jnp.zeros((), jnp.int32)
+        slot = (pos % w).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        kvlen = jnp.full((b,), jnp.minimum(pos + 1, w), jnp.int32)
+        o = mha_ref(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                    kv_valid_len=kvlen, causal=False)
+        nc = {"k": ck, "v": cv}
+    return cm.dense(p["o"], o.reshape(b, s, hq * hd)), nc
+
+
+def _cross_attn(p, x, enc_out, cfg):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    se = enc_out.shape[1]
+    q = cm.dense(p["q"], x).reshape(b, s, hq, hd)
+    k = cm.dense(p["k"], enc_out).reshape(b, se, hkv, hd)
+    v = cm.dense(p["v"], enc_out).reshape(b, se, hkv, hd)
+    o = mha_chunked(q, k, v, causal=False)
+    return cm.dense(p["o"], o.reshape(b, s, hq * hd))
+
+
+def encode(params, frames, cfg: ArchConfig, aaq: AAQConfig = DISABLED):
+    """frames (B, n_frames, d_model) — stubbed conv-frontend output."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)[None]
+    for p in params["enc_blocks"]:
+        a, _ = _self_attn(p["attn"], cm.layernorm(p["attn_norm"], x), cfg,
+                          causal=False, aaq=aaq)
+        x = x + a
+        x = x + tf.mlp_apply(p["mlp"], cm.layernorm(p["mlp_norm"], x), cfg)
+    return cm.layernorm(params["enc_norm"], x)
+
+
+def decode_full(params, tokens, enc_out, cfg: ArchConfig,
+                aaq: AAQConfig = DISABLED, last_only=False,
+                return_hidden=False):
+    b, s = tokens.shape
+    x = cm.embed(params["embed"], tokens) + params["pos_dec"]["e"][:s][None].astype(cfg.np_dtype)
+    for p in params["dec_blocks"]:
+        a, _ = _self_attn(p["attn"], cm.layernorm(p["attn_norm"], x), cfg,
+                          causal=True, aaq=aaq)
+        x = x + a
+        x = x + _cross_attn(p["cross"], cm.layernorm(p["cross_norm"], x),
+                            enc_out, cfg)
+        x = x + tf.mlp_apply(p["mlp"], cm.layernorm(p["mlp_norm"], x), cfg)
+        x = tf._constrain(x, "residual")
+    x = cm.layernorm(params["final_norm"], x)
+    if return_hidden:
+        return x
+    if last_only:
+        x = x[:, -1:]
+    return jnp.dot(x, params["embed"]["e"].astype(x.dtype).T,
+                   preferred_element_type=jnp.float32)
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, aaq: AAQConfig = DISABLED,
+                remat=False):
+    enc_out = encode(params, batch["audio_frames"], cfg, aaq)
+    x = decode_full(params, batch["tokens"], enc_out, cfg, aaq,
+                    return_hidden=True)
+    return tf.chunked_xent(params, x, batch["labels"], cfg)
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.np_dtype
+    shape = (cfg.layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "enc_out": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model), dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def encdec_decode_step(params, batch, cache, cfg: ArchConfig,
+                       aaq: AAQConfig = DISABLED):
+    """One decoder token against a (possibly mechanically long) self-KV cache
+    + fixed encoder output (the assignment's decode_32k/long cells)."""
+    b = batch["tokens"].shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    pos_emb = jnp.take(params["pos_dec"]["e"],
+                       jnp.minimum(pos, cfg.max_seq - 1), axis=0)
+    x = cm.embed(params["embed"], batch["tokens"]) + pos_emb[None, None].astype(cfg.np_dtype)
+    enc_out = cache["enc_out"].astype(x.dtype)
+    nk, nv = [], []
+    for li, p in enumerate(params["dec_blocks"]):
+        lc = {"k": cache["k"][li], "v": cache["v"][li]}
+        a, nc = _self_attn(p["attn"], cm.layernorm(p["attn_norm"], x), cfg,
+                           causal=False, cache=lc, positions=positions, aaq=aaq)
+        x = x + a
+        x = x + _cross_attn(p["cross"], cm.layernorm(p["cross_norm"], x),
+                            enc_out, cfg)
+        x = x + tf.mlp_apply(p["mlp"], cm.layernorm(p["mlp_norm"], x), cfg)
+        nk.append(nc["k"])
+        nv.append(nc["v"])
+    x = cm.layernorm(params["final_norm"], x)
+    logits = jnp.dot(x, params["embed"]["e"].astype(x.dtype).T,
+                     preferred_element_type=jnp.float32)
+    return logits, {"k": jnp.stack(nk), "v": jnp.stack(nv),
+                    "enc_out": cache["enc_out"], "pos": pos + 1}

@@ -1,0 +1,234 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention, 2:1
+pattern [arXiv:2402.19427].
+
+Train/prefill run the RG-LRU with an associative scan (log-depth on TPU);
+decode carries the (B, lru_width) hidden state — O(1) memory, so the arch
+runs the long_500k cell (attention is local, window-bounded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import AAQConfig, DISABLED
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+Params = dict[str, Any]
+_C = 8.0   # RG-LRU decay sharpness constant (Griffin paper)
+
+
+def _lru_width(cfg: ArchConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru_block(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 7)
+    d, w = cfg.d_model, _lru_width(cfg)
+    dt = cfg.np_dtype
+    return {
+        "norm": tf._norm_init(cfg),
+        "in_x": cm.dense_init(ks[0], d, w, dtype=dt),
+        "in_gate": cm.dense_init(ks[1], d, w, dtype=dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.hybrid.conv_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a": cm.dense_init(ks[3], w, w, dtype=dt),      # recurrence gate
+        "gate_i": cm.dense_init(ks[4], w, w, dtype=dt),      # input gate
+        "lam": (jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)).astype(dt),
+        "out": cm.dense_init(ks[6], w, d, dtype=dt),
+        "mlp_norm": tf._norm_init(cfg),
+        "mlp": tf.init_mlp(ks[0], cfg),
+    }
+
+
+def _rglru(x, gate_in, p, state=None, aaq: AAQConfig = DISABLED):
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t);  x (B,S,W)."""
+    r = jax.nn.sigmoid(cm.dense(p["gate_a"], gate_in).astype(jnp.float32))
+    i = jax.nn.sigmoid(cm.dense(p["gate_i"], gate_in).astype(jnp.float32))
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = -_C * lam[None, None] * r                        # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    if x.shape[1] == 1 and state is not None:                # decode step
+        h = a[:, 0] * state.astype(jnp.float32) + gated[:, 0]
+        h = aaq.act(h, "hybrid.rnn_state")
+        return h[:, None], h
+    # associative scan over time: elements (a_t, b_t), combine
+    def comb(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    if state is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * state.astype(jnp.float32))
+    a_s, h = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    h = aaq.act(h, "hybrid.rnn_state")
+    return h, h[:, -1]
+
+
+def rglru_block_apply(p, x, cfg: ArchConfig, *, positions=None, cache=None,
+                      aaq: AAQConfig = DISABLED):
+    """Griffin recurrent block: norm -> (conv+RG-LRU) x gelu-gate -> out."""
+    h = tf.apply_norm(p["norm"], aaq.act(x, "lm.pre_ln"), cfg)
+    xb = cm.dense(p["in_x"], h)
+    gate = jax.nn.gelu(cm.dense(p["in_gate"], h))
+    conv_state = cache.get("conv") if cache else None
+    kw = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], kw - 1, xb.shape[-1]), xb.dtype)
+    full = jnp.concatenate([conv_state, xb], axis=1)
+    xc = sum(full[:, i:i + xb.shape[1]] * p["conv_w"][i] for i in range(kw))
+    xc = xc + p["conv_b"]
+    new_conv = full[:, -(kw - 1):]
+    rnn_state = cache.get("state") if cache else None
+    hseq, last = _rglru(xc, h, p, rnn_state, aaq)
+    y = cm.dense(p["out"], (hseq.astype(x.dtype) * gate))
+    x = x + y
+    x = x + tf.mlp_apply(p["mlp"], tf.apply_norm(p["mlp_norm"], x, cfg), cfg)
+    new_cache = None if cache is None else {"state": last.astype(x.dtype),
+                                            "conv": new_conv}
+    return x, new_cache
+
+
+def is_attn_layer(cfg: ArchConfig, li: int) -> bool:
+    """1 local-attention layer per (attn_every - 1) recurrent layers."""
+    return (li % cfg.hybrid.attn_every) == (cfg.hybrid.attn_every - 1)
+
+
+def _n_periods_tail(cfg: ArchConfig) -> tuple[int, int]:
+    """Layers group into scanning periods of ``attn_every`` ([rec, rec,
+    attn] for RecurrentGemma) + a python-looped tail of leftover layers —
+    the HLO stays O(1) in depth (38 unrolled layers is un-compilable at
+    production batch)."""
+    return cfg.layers // cfg.hybrid.attn_every, cfg.layers % cfg.hybrid.attn_every
+
+
+def _init_period(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, cfg.hybrid.attn_every)
+    period = {}
+    for j, k in enumerate(ks):
+        if j == cfg.hybrid.attn_every - 1:
+            period[f"b{j}"] = tf.init_block(k, cfg)          # local attention
+        else:
+            period[f"b{j}"] = init_rglru_block(k, cfg)
+    return period
+
+
+def _period_apply(period, x, cfg, positions, aaq, caches=None):
+    """caches: {'b0': lc0, ...} or None; returns (x, new_caches)."""
+    new = {}
+    for j in range(cfg.hybrid.attn_every):
+        p = period[f"b{j}"]
+        lc = caches.get(f"b{j}") if caches else None
+        if j == cfg.hybrid.attn_every - 1:
+            x, nc = tf.block_apply(p, x, cfg, positions=positions, cache=lc,
+                                   aaq=aaq)
+        else:
+            x, nc = rglru_block_apply(p, x, cfg, positions=positions,
+                                      cache=lc, aaq=aaq)
+        new[f"b{j}"] = nc
+    return x, new
+
+
+def init_hybrid_lm(key, cfg: ArchConfig) -> Params:
+    from functools import partial
+    k_embed, k_blocks, k_tail, k_head = jax.random.split(key, 4)
+    dt = cfg.np_dtype
+    n_periods, tail = _n_periods_tail(cfg)
+    p = {"embed": cm.embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+         "periods": jax.vmap(partial(_init_period, cfg=cfg))(
+             jax.random.split(k_blocks, n_periods)),
+         "tail": [init_rglru_block(k, cfg)
+                  for k in jax.random.split(k_tail, max(tail, 1))[:tail]],
+         "final_norm": tf._norm_init(cfg)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_init(k_head, cfg.d_model, cfg.vocab, dtype=dt)
+    return p
+
+
+def hybrid_forward(params, batch, cfg: ArchConfig, *,
+                   aaq: AAQConfig = DISABLED, remat=False, last_only=False,
+                   return_hidden=False):
+    x = cm.embed(params["embed"], batch["tokens"])
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, period):
+        y, _ = _period_apply(period, carry, cfg, positions, aaq)
+        return tf._constrain(y, "residual"), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    for p in params["tail"]:
+        x, _ = rglru_block_apply(p, x, cfg, positions=positions, aaq=aaq)
+        x = tf._constrain(x, "residual")
+    x = tf.apply_norm(params["final_norm"], x, cfg)
+    if return_hidden:
+        return x
+    if last_only:
+        x = x[:, -1:]
+    return tf._constrain(tf._unembed(params, x, cfg), "logits")
+
+
+def hybrid_loss(params, batch, cfg: ArchConfig, *, aaq: AAQConfig = DISABLED,
+                remat=True):
+    x = hybrid_forward(params, batch, cfg, aaq=aaq, remat=remat,
+                       return_hidden=True)
+    return tf.chunked_xent(params, x, batch["labels"], cfg)
+
+
+def _period_cache(cfg: ArchConfig, batch: int, window: int, dt):
+    w = _lru_width(cfg)
+    pc = {}
+    for j in range(cfg.hybrid.attn_every):
+        if j == cfg.hybrid.attn_every - 1:
+            pc[f"b{j}"] = {
+                "k": jnp.zeros((batch, window, cfg.n_kv_heads, cfg.hd), dt),
+                "v": jnp.zeros((batch, window, cfg.n_kv_heads, cfg.hd), dt)}
+        else:
+            pc[f"b{j}"] = {
+                "state": jnp.zeros((batch, w), dt),
+                "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, w), dt)}
+    return pc
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.np_dtype
+    w = _lru_width(cfg)
+    window = min(max_len, cfg.hybrid.window)
+    n_periods, tail = _n_periods_tail(cfg)
+    periods = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_periods, *a.shape)).copy(),
+        _period_cache(cfg, batch, window, dt))
+    tails = [{"state": jnp.zeros((batch, w), dt),
+              "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, w), dt)}
+             for _ in range(tail)]
+    return {"periods": periods, "tail": tails,
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def hybrid_decode_step(params, batch, cache, cfg: ArchConfig, *,
+                       aaq: AAQConfig = DISABLED):
+    x = cm.embed(params["embed"], batch["tokens"])
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    def body(carry, xs):
+        period, pc = xs
+        y, nc = _period_apply(period, carry, cfg, positions, aaq, caches=pc)
+        return y, nc
+
+    x, new_periods = jax.lax.scan(body, x,
+                                  (params["periods"], cache["periods"]))
+    new_tail = []
+    for p, lc in zip(params["tail"], cache["tail"]):
+        x, nc = rglru_block_apply(p, x, cfg, positions=positions, cache=lc,
+                                  aaq=aaq)
+        new_tail.append(nc)
+    x = tf.apply_norm(params["final_norm"], x, cfg)
+    logits = tf._unembed(params, x, cfg)
+    return logits, {"periods": new_periods, "tail": new_tail, "pos": pos + 1}

@@ -1,0 +1,249 @@
+"""Unified architecture API.
+
+Everything downstream (launcher, dry-run, smoke tests, benches) talks to the
+zoo through four functions, dispatched on ``ArchConfig.kind``:
+
+    init_params(key, cfg)                      -> params pytree
+    loss_fn(params, batch, cfg, aaq)           -> scalar loss      (train_*)
+    prefill_fn(params, batch, cfg, aaq)        -> logits           (prefill_*)
+    decode_fn(params, batch, cache, cfg, aaq)  -> (logits, cache') (decode_*/long_*)
+    make_cache(cfg, batch_size, max_len)       -> cache pytree
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every input
+of the corresponding step — the dry-run lowers against these, no allocation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.policy import AAQConfig, DISABLED
+from repro.models import common as cm
+from repro.models import encdec as ed
+from repro.models import hybrid as hy
+from repro.models import moe as me
+from repro.models import ssm as sm
+from repro.models import transformer as tf
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig):
+    if cfg.kind in ("dense", "vlm"):
+        return tf.init_lm(key, cfg)
+    if cfg.kind == "moe":
+        scan_cfg = (cfg.replace(layers=cfg.layers - 1)
+                    if cfg.moe.dense_first_layer_ff else cfg)
+        p = tf.init_lm(key, scan_cfg, init_block_fn=me.moe_block_init)
+        if cfg.moe.dense_first_layer_ff:
+            k1, k2 = jax.random.split(jax.random.fold_in(key, 1))
+            p["first_block"] = {
+                "attn_norm": tf._norm_init(cfg),
+                "attn": me.init_mla(k1, cfg) if cfg.mla else tf.init_attn(k1, cfg),
+                "mlp_norm": tf._norm_init(cfg),
+                "mlp": tf.init_mlp(k2, cfg, d_ff=cfg.moe.dense_first_layer_ff),
+            }
+        return p
+    if cfg.kind == "ssm":
+        return tf.init_lm(key, cfg, init_block_fn=sm.init_ssm_block)
+    if cfg.kind == "hybrid":
+        return hy.init_hybrid_lm(key, cfg)
+    if cfg.kind == "encdec":
+        return ed.init_encdec(key, cfg)
+    raise ValueError(cfg.kind)
+
+
+def _scan_block_count(cfg: ArchConfig) -> int:
+    if cfg.kind == "moe" and cfg.moe.dense_first_layer_ff:
+        return cfg.layers - 1
+    return cfg.layers
+
+
+def _moe_first_block_fn(p, x, cfg, *, positions, cache=None, aaq=DISABLED,
+                        mlp_fn=None):
+    """DeepSeek layer 0: MLA attention + *dense* FFN."""
+    h = aaq.act(x, "lm.pre_ln")
+    hn = tf.apply_norm(p["attn_norm"], h, cfg)
+    if cfg.mla:
+        a, nc = me.mla_apply(p["attn"], hn, cfg, positions=positions,
+                             cache=cache, aaq=aaq)
+    else:
+        a, nc = tf.attn_apply(p["attn"], hn, cfg, positions=positions,
+                              cache=cache, aaq=aaq)
+    x = x + a
+    x = x + tf.mlp_apply(p["mlp"], tf.apply_norm(p["mlp_norm"],
+                                                 aaq.act(x, "lm.pre_ln"), cfg), cfg)
+    return x, nc
+
+
+def _block_fn_for(cfg: ArchConfig):
+    if cfg.kind == "moe":
+        return me.moe_block_apply
+    if cfg.kind == "ssm":
+        return sm.ssm_block_apply
+    return tf.block_apply
+
+
+# --------------------------------------------------------------------------
+# ssm residual nuance: ssm_block_apply already adds the residual
+# --------------------------------------------------------------------------
+def loss_fn(params, batch, cfg: ArchConfig, aaq: AAQConfig = DISABLED,
+            remat: bool = True):
+    if cfg.kind == "hybrid":
+        return hy.hybrid_loss(params, batch, cfg, aaq=aaq, remat=remat)
+    if cfg.kind == "encdec":
+        return ed.encdec_loss(params, batch, cfg, aaq=aaq, remat=remat)
+    if cfg.kind == "moe" and cfg.moe.dense_first_layer_ff:
+        return _moe_loss_with_first(params, batch, cfg, aaq, remat)
+    return tf.lm_loss(params, batch, cfg, aaq=aaq,
+                      block_fn=_block_fn_for(cfg), remat=remat)
+
+
+def _moe_loss_with_first(params, batch, cfg, aaq, remat):
+    x = tf._embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, _ = _moe_first_block_fn(params["first_block"], x, cfg,
+                               positions=positions, aaq=aaq)
+
+    def body(carry, p):
+        y, _ = me.moe_block_apply(p, carry, cfg, positions=positions, aaq=aaq)
+        return tf._constrain(y, "residual"), None
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = tf.apply_norm(params["final_norm"], x, cfg)
+    return tf.chunked_xent(params, x, batch["labels"], cfg)
+
+
+def prefill_fn(params, batch, cfg: ArchConfig, aaq: AAQConfig = DISABLED,
+               remat: bool = False):
+    """Full-sequence forward -> logits (the prefill_32k cells)."""
+    if cfg.kind == "hybrid":
+        return hy.hybrid_forward(params, batch, cfg, aaq=aaq, remat=remat,
+                                 last_only=True)
+    if cfg.kind == "encdec":
+        enc = ed.encode(params, batch["audio_frames"], cfg, aaq)
+        return ed.decode_full(params, batch["tokens"], enc, cfg, aaq,
+                              last_only=True)
+    if cfg.kind == "moe" and cfg.moe.dense_first_layer_ff:
+        # reuse the loss path sans loss: forward only
+        x = tf._embed_inputs(params, batch, cfg)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x, _ = _moe_first_block_fn(params["first_block"], x, cfg,
+                                   positions=positions, aaq=aaq)
+
+        def body(carry, p):
+            y, _ = me.moe_block_apply(p, carry, cfg, positions=positions,
+                                      aaq=aaq)
+            return tf._constrain(y, "residual"), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        x = tf.apply_norm(params["final_norm"], x, cfg)
+        return tf._constrain(tf._unembed(params, x[:, -1:], cfg), "logits")
+    return tf.lm_forward(params, batch, cfg, aaq=aaq,
+                         block_fn=_block_fn_for(cfg), remat=remat,
+                         last_only=True)
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
+               quantized: bool = False):
+    if cfg.kind in ("dense", "vlm"):
+        return tf.init_cache(cfg, batch, max_len, dtype, quantized=quantized)
+    if cfg.kind == "moe":
+        if cfg.mla:
+            c = me.init_mla_cache(cfg, batch, max_len, dtype)
+        else:
+            c = tf.init_cache(cfg, batch, min(max_len, cfg.window or max_len),
+                              dtype)
+        return c
+    if cfg.kind == "ssm":
+        return sm.init_ssm_cache(cfg, batch, max_len, dtype)
+    if cfg.kind == "hybrid":
+        return hy.init_hybrid_cache(cfg, batch, max_len, dtype)
+    if cfg.kind == "encdec":
+        return ed.init_encdec_cache(cfg, batch, max_len, dtype)
+    raise ValueError(cfg.kind)
+
+
+def decode_fn(params, batch, cache, cfg: ArchConfig,
+              aaq: AAQConfig = DISABLED):
+    if cfg.kind == "hybrid":
+        return hy.hybrid_decode_step(params, batch, cache, cfg, aaq=aaq)
+    if cfg.kind == "encdec":
+        return ed.encdec_decode_step(params, batch, cache, cfg, aaq=aaq)
+    if cfg.kind == "moe" and cfg.moe.dense_first_layer_ff:
+        # split cache: first layer + the scanned rest
+        first_cache = jax.tree.map(lambda a: a[0],
+                                   {k: v for k, v in cache.items() if k != "pos"})
+        rest_cache = {k: v[1:] for k, v in cache.items() if k != "pos"}
+        b = batch["tokens"].shape[0]
+        pos = cache["pos"]
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        x = cm.embed(params["embed"], batch["tokens"])
+        x, nc_first = _moe_first_block_fn(params["first_block"], x, cfg,
+                                          positions=positions,
+                                          cache=first_cache, aaq=aaq)
+
+        def body(carry, layer):
+            p, lc = layer
+            y, nc = me.moe_block_apply(p, carry, cfg, positions=positions,
+                                       cache=lc, aaq=aaq)
+            return y, nc
+        x, nc_rest = jax.lax.scan(body, x, (params["blocks"], rest_cache))
+        x = tf.apply_norm(params["final_norm"], x, cfg)
+        logits = tf._unembed(params, x, cfg)
+        new_cache = jax.tree.map(lambda f, r: jnp.concatenate([f[None], r]),
+                                 nc_first, nc_rest)
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+    return tf.decode_step(params, batch, cache, cfg,
+                          aaq=aaq, block_fn=_block_fn_for(cfg))
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (no allocation)
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                quantized_kv: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step for this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.np_dtype
+    if shape.step == "train":
+        batch = {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+        if cfg.kind == "vlm":
+            n_img = cfg.n_image_tokens
+            batch = {"tokens": _sds((b, s - n_img), i32),
+                     "image_embeds": _sds((b, n_img, cfg.d_model), dt),
+                     "labels": _sds((b, s - n_img), i32)}
+        if cfg.kind == "encdec":
+            batch["audio_frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.step == "prefill":
+        batch = {"tokens": _sds((b, s), i32)}
+        if cfg.kind == "vlm":
+            n_img = cfg.n_image_tokens
+            batch = {"tokens": _sds((b, s - n_img), i32),
+                     "image_embeds": _sds((b, n_img, cfg.d_model), dt)}
+        if cfg.kind == "encdec":
+            batch["audio_frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.step == "decode":
+        cache = jax.eval_shape(
+            lambda: make_cache(cfg, b, s, quantized=quantized_kv))
+        return {"batch": {"tokens": _sds((b, 1), i32)}, "cache": cache}
+    raise ValueError(shape.step)
+
+
+def param_specs(cfg: ArchConfig):
+    """Parameter shapes without allocating (eval_shape over init)."""
+    return jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))

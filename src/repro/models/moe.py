@@ -1,0 +1,233 @@
+"""Mixture-of-Experts layers (Mixtral top-2, DeepSeek shared+routed top-6)
+and DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Dispatch is the GShard/MaxText dense-einsum formulation: one-hot dispatch/
+combine tensors with static per-expert capacity — no dynamic shapes, fully
+shardable over the expert axis (EP) or the FFN hidden axis (TP).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.core.policy import AAQConfig, DISABLED
+from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# MoE FFN
+# --------------------------------------------------------------------------
+def init_moe_mlp(key, cfg: ArchConfig) -> Params:
+    moe = cfg.moe
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    dt = cfg.np_dtype
+
+    def one_expert(k):
+        return tf.init_mlp(k, cfg, d_ff=moe.expert_ff)
+
+    p = {
+        "router": cm.dense_init(k_router, cfg.d_model, moe.n_experts, dtype=dt),
+        "experts": jax.vmap(one_expert)(jax.random.split(k_experts, moe.n_experts)),
+    }
+    if moe.n_shared:
+        p["shared"] = tf.init_mlp(k_shared, cfg, d_ff=moe.expert_ff * moe.n_shared)
+    return p
+
+
+def _expert_ffn(p, xe, cfg: ArchConfig, constrain=lambda x, _: x):
+    """xe (E, C, d) through stacked expert weights (E, d, f)/(E, f, d)."""
+    act = {"silu_glu": jax.nn.silu, "gelu_glu": jax.nn.gelu,
+           "gelu": jax.nn.gelu, "relu": jax.nn.relu}[cfg.act]
+    up = jnp.einsum("ecd,edf->ecf", xe, p["up"]["w"].astype(xe.dtype))
+    if "gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["gate"]["w"].astype(xe.dtype))
+        h = act(g) * up
+    else:
+        h = act(up)
+    h = constrain(h, "moe_hidden")
+    return jnp.einsum("ecf,efd->ecd", h, p["down"]["w"].astype(xe.dtype))
+
+
+MOE_GROUP = 512   # tokens per routing group (capacity enforced per group)
+
+
+def _dispatch_tensors(gates, k: int, cap: int):
+    """gates (G, E) -> (dispatch, combine) each (G, E, cap).
+
+    GShard position-in-expert via cumulative sums, priority by choice rank."""
+    g, e = gates.shape
+    topv, topi = jax.lax.top_k(gates, k)                             # (G,k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+    masks = jax.nn.one_hot(topi, e, dtype=jnp.float32)               # (G,k,E)
+    expert_count = jnp.zeros((e,), jnp.float32)
+    dispatch = jnp.zeros((g, e, cap), jnp.float32)
+    combine = jnp.zeros((g, e, cap), jnp.float32)
+    for j in range(k):
+        m = masks[:, j]                                              # (G,E)
+        prio = jnp.cumsum(m, axis=0) - m + expert_count[None]
+        expert_count = expert_count + jnp.sum(m, axis=0)
+        slot = jnp.sum(prio * m, axis=-1).astype(jnp.int32)          # (G,)
+        within = (slot < cap).astype(jnp.float32)
+        oh_slot = jax.nn.one_hot(slot, cap, dtype=jnp.float32)       # (G,C)
+        dj = m[:, :, None] * oh_slot[:, None, :] * within[:, None, None]
+        dispatch = dispatch + dj
+        combine = combine + dj * topv[:, j][:, None, None]
+    return dispatch, combine
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """Top-k token-choice routing, static capacity enforced per token-group.
+
+    Grouping (MOE_GROUP tokens) keeps the one-hot dispatch tensor linear in
+    token count — (T/G, G, E, C_g) with C_g = ceil(G k/E cf) — instead of the
+    quadratic global (T, E, T k/E) form, which is petabyte-scale at a 1M-token
+    global batch.  Capacity-per-group is the Switch-Transformer discipline;
+    the dropped-token behaviour is equivalent in expectation (DESIGN.md §8).
+    """
+    from repro.parallel.sharding import rule_value
+    moe = cfg.moe
+    b, s, d = x.shape
+    t, e, k = b * s, moe.n_experts, moe.top_k
+    grp = min(int(rule_value("moe_group", MOE_GROUP)), t)
+    while t % grp:
+        grp //= 2
+    ng = t // grp
+    assert t % grp == 0, (t, grp)
+    cap = max(4, int(math.ceil(grp * k / e * moe.capacity_factor)))
+    xt = tf._constrain(x.reshape(ng, grp, d), "moe_tokens")
+    gates = jax.nn.softmax(
+        cm.dense(p["router"], xt).astype(jnp.float32), axis=-1)      # (ng,G,E)
+    dispatch, combine = jax.vmap(partial(_dispatch_tensors, k=k, cap=cap))(gates)
+    xe = jnp.einsum("ngec,ngd->necd", dispatch.astype(x.dtype), xt)  # (ng,E,C,d)
+    xe = tf._constrain(xe, "moe_xe")
+    ne, ee, cc, dd = xe.shape
+    ye = _expert_ffn(p["experts"],
+                     xe.swapaxes(0, 1).reshape(ee, ne * cc, d), cfg,
+                     constrain=tf._constrain)
+    ye = tf._constrain(ye.reshape(ee, ne, cc, d).swapaxes(0, 1), "moe_xe")
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)
+    y = y.reshape(t, d)
+    if moe.n_shared:
+        y = y + tf.mlp_apply(p["shared"], x.reshape(t, d), cfg)
+    return y.reshape(b, s, d)
+
+
+def moe_block_init(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": tf._norm_init(cfg),
+        "mlp_norm": tf._norm_init(cfg),
+        "mlp": init_moe_mlp(k2, cfg),
+    }
+    p["attn"] = (init_mla(k1, cfg) if cfg.mla else tf.init_attn(k1, cfg))
+    return p
+
+
+def moe_block_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+                    aaq: AAQConfig = DISABLED, mlp_fn=None):
+    h = aaq.act(x, "lm.pre_ln")
+    hn = tf.apply_norm(p["attn_norm"], h, cfg)
+    if cfg.mla:
+        a, new_cache = mla_apply(p["attn"], hn, cfg, positions=positions,
+                                 cache=cache, aaq=aaq)
+    else:
+        a, new_cache = tf.attn_apply(p["attn"], hn, cfg, positions=positions,
+                                     cache=cache, aaq=aaq)
+    x = x + a
+    mlp_in = tf.apply_norm(p["mlp_norm"], aaq.act(x, "lm.pre_ln"), cfg)
+    x = x + moe_apply(p["mlp"], mlp_in, cfg)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# DeepSeek-V2 Multi-head Latent Attention
+# --------------------------------------------------------------------------
+def init_mla(key, cfg: ArchConfig) -> Params:
+    m = cfg.mla
+    ks = jax.random.split(key, 5)
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.np_dtype
+    return {
+        "kv_down": cm.dense_init(ks[0], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dt),
+        "latent_norm": cm.rms_init(m.kv_lora_rank, dt),
+        "k_up": cm.dense_init(ks[1], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype=dt),
+        "v_up": cm.dense_init(ks[2], m.kv_lora_rank, h * m.v_head_dim, dtype=dt),
+        "q": cm.dense_init(ks[3], d, h * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype=dt),
+        "o": cm.dense_init(ks[4], h * m.v_head_dim, d, dtype=dt),
+    }
+
+
+def _mla_qkv_from_latent(p, latent, k_rope, q, cfg: ArchConfig):
+    """Expand the compressed KV latent into per-head K/V and run attention."""
+    m = cfg.mla
+    b, skv, _ = latent.shape
+    h = cfg.n_heads
+    k_nope = cm.dense(p["k_up"], latent).reshape(b, skv, h, m.qk_nope_head_dim)
+    v = cm.dense(p["v_up"], latent).reshape(b, skv, h, m.v_head_dim)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, skv, h, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+              aaq: AAQConfig = DISABLED):
+    """MLA attention. Cache = the compressed latent + rope key (B, S, r+rd):
+    AAQ quantizes *the latent* — the token here is the 512-dim latent vector,
+    LightNobel's scheme applied to DeepSeek's already-compressed cache."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    down = cm.dense(p["kv_down"], x)
+    latent, k_rope = down[..., :m.kv_lora_rank], down[..., m.kv_lora_rank:]
+    latent = cm.rmsnorm(p["latent_norm"], latent)
+    q = cm.dense(p["q"], x).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions,
+                           cfg.rope_theta)[:, :, 0, :]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    latent = aaq.act(latent, "lm.mla_latent")          # AAQ on the latent
+    k_rope = aaq.act(k_rope, "lm.mla_latent")
+
+    if cache is None:
+        k, v = _mla_qkv_from_latent(p, latent, k_rope, q, cfg)
+        o = mha_chunked(q, k, v, causal=True,
+                        softmax_scale=1.0 / math.sqrt(dn + dr))
+        new_cache = None
+    else:
+        w = cache["latent"].shape[1]
+        pos = positions[0, 0] if positions.ndim > 1 else positions[0]
+        slot = (pos % w).astype(jnp.int32)
+        cl = jax.lax.dynamic_update_slice(
+            cache["latent"], latent.astype(cache["latent"].dtype), (0, slot, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+        k, v = _mla_qkv_from_latent(p, cl.astype(x.dtype), cr.astype(x.dtype),
+                                    q, cfg)
+        kvlen = jnp.full((b,), jnp.minimum(pos + 1, w), jnp.int32)
+        o = mha_ref(q, k, v, kv_valid_len=kvlen, causal=False,
+                    softmax_scale=1.0 / math.sqrt(dn + dr))
+        new_cache = {"latent": cl, "k_rope": cr}
+    o = o.reshape(b, s, h * m.v_head_dim)
+    return cm.dense(p["o"], o), new_cache
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    m = cfg.mla
+    dt = dtype or cfg.np_dtype
+    return {
+        "latent": jnp.zeros((cfg.layers, batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((cfg.layers, batch, max_len, m.qk_rope_head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }

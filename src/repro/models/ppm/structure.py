@@ -1,0 +1,99 @@
+"""Structure module (IPA-lite) + structural metrics (Kabsch, TM-score).
+
+Produces 3-D backbone (C-alpha) coordinates from the trunk's sequence/pair
+representations via iterative pair-biased attention with a point-distance
+term — a simplified Invariant Point Attention that keeps the property we
+need for validation: coordinates are a smooth deterministic function of
+(s, z), so quantization error in the Pair dataflow surfaces as TM-score
+deviation exactly as in the paper's Fig. 13 protocol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_structure(key, cfg) -> cm.Params:
+    ks = iter(jax.random.split(key, 16))
+    hm, hz, heads = cfg.hm, cfg.hz, cfg.seq_heads
+
+    def d(i, o, bias=False, zero=False):
+        fn = cm.dense_zero_init if zero else cm.dense_init
+        return fn(next(ks), i, o, bias=bias, dtype=cfg.np_dtype)
+
+    return {
+        "ln_s": cm.ln_init(hm, cfg.np_dtype),
+        "ln_z": cm.ln_init(hz, cfg.np_dtype),
+        "qkv": d(hm, 3 * hm, bias=True),
+        "pair_bias": d(hz, heads),
+        "out": d(hm, hm),
+        "trans_mlp": {"ln": cm.ln_init(hm, cfg.np_dtype),
+                      "up": d(hm, 2 * hm, bias=True),
+                      "down": d(2 * hm, hm, bias=True)},
+        "coord_ln": cm.ln_init(hm, cfg.np_dtype),
+        "coord": d(hm, 3, bias=True),
+        "dist_w": jnp.full((heads,), 0.1, cfg.np_dtype),
+    }
+
+
+def structure_apply(p, s, z, n_iter: int = 4):
+    """Returns (coords (B,N,3), s_final)."""
+    b, n, hm = s.shape
+    heads = p["pair_bias"]["w"].shape[-1]
+    dh = hm // heads
+    t = jnp.zeros((b, n, 3), jnp.float32)
+    bias = cm.dense(p["pair_bias"], cm.layernorm(p["ln_z"], z))  # (B,N,N,H)
+    bias = jnp.transpose(bias, (0, 3, 1, 2)).astype(jnp.float32)
+    for _ in range(n_iter):
+        sl = cm.layernorm(p["ln_s"], s)
+        q, k, v = jnp.split(cm.dense(p["qkv"], sl), 3, axis=-1)
+        q = q.reshape(b, n, heads, dh)
+        k = k.reshape(b, n, heads, dh)
+        v = v.reshape(b, n, heads, dh)
+        d2 = jnp.sum((t[:, :, None] - t[:, None, :]) ** 2, axis=-1)  # (B,N,N)
+        logits = (jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32),
+                             k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+                  + bias
+                  - jax.nn.softplus(p["dist_w"].astype(jnp.float32))[None, :, None, None]
+                  * d2[:, None])
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhij,bjhd->bihd", probs, v.astype(jnp.float32))
+        s = s + cm.dense(p["out"], o.reshape(b, n, hm).astype(s.dtype))
+        tm = p["trans_mlp"]
+        s = s + cm.dense(tm["down"], jax.nn.relu(cm.dense(tm["up"], cm.layernorm(tm["ln"], s))))
+        t = t + cm.dense(p["coord"], cm.layernorm(p["coord_ln"], s)).astype(jnp.float32)
+    return t, s
+
+
+# --------------------------------------------------------------------------
+# structural metrics
+# --------------------------------------------------------------------------
+def kabsch_align(P: jax.Array, Q: jax.Array) -> jax.Array:
+    """Optimal-superposition of P onto Q (both (N,3)); returns aligned P."""
+    Pc = P - P.mean(axis=0, keepdims=True)
+    Qc = Q - Q.mean(axis=0, keepdims=True)
+    H = Pc.T @ Qc
+    U, _, Vt = jnp.linalg.svd(H.astype(jnp.float32))
+    d = jnp.sign(jnp.linalg.det(Vt.T @ U.T))
+    R = (Vt.T * jnp.array([1.0, 1.0, 1.0]).at[2].set(d)) @ U.T
+    return Pc @ R.T + Q.mean(axis=0, keepdims=True)
+
+
+def tm_score(P: jax.Array, Q: jax.Array) -> jax.Array:
+    """TM-score of predicted P vs reference Q, both (N,3) C-alpha traces.
+
+    TM = 1/N * sum_i 1 / (1 + (d_i/d0)^2),  d0 = 1.24 (N-15)^(1/3) - 1.8
+    (d0 clamped at 0.5 for short chains), after optimal superposition.
+    """
+    n = P.shape[0]
+    d0 = jnp.maximum(1.24 * jnp.cbrt(jnp.maximum(n - 15.0, 1.0)) - 1.8, 0.5)
+    Pa = kabsch_align(P.astype(jnp.float32), Q.astype(jnp.float32))
+    d = jnp.sqrt(jnp.sum((Pa - Q.astype(jnp.float32)) ** 2, axis=-1) + 1e-12)
+    return jnp.mean(1.0 / (1.0 + (d / d0) ** 2))
+
+
+def rmsd(P: jax.Array, Q: jax.Array) -> jax.Array:
+    Pa = kabsch_align(P.astype(jnp.float32), Q.astype(jnp.float32))
+    return jnp.sqrt(jnp.mean(jnp.sum((Pa - Q) ** 2, axis=-1)))

@@ -1,0 +1,183 @@
+"""Mamba-2: State Space Duality (SSD), chunked dual form [arXiv:2405.21060].
+
+Train/prefill use the chunked algorithm (quadratic within chunks, linear
+state passing across chunks — the TPU-friendly formulation: all chunk-local
+work is MXU matmuls).  Decode carries the (B, H, P, N) state — O(1) in
+sequence length, which is why mamba2 runs the long_500k cell.
+
+AAQ hook: the inter-chunk states and the decode state are token-like
+(trailing feature axis) and pass through ``aaq.act(·, 'ssm.state')``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import AAQConfig, DISABLED
+from repro.models import common as cm
+
+Params = dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.head_dim
+
+
+def init_ssm_block(key, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    d_inner, n_heads, n, p_ = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = cfg.np_dtype
+    conv_dim = d_inner + 2 * n                       # x, B, C share the conv
+    return {
+        "norm": cm.rms_init(cfg.d_model, dt),
+        # in_proj -> [z (gate), xBC (conv'd), dt]
+        "in_proj": cm.dense_init(ks[0], cfg.d_model,
+                                 2 * d_inner + 2 * n + n_heads, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32))[...].astype(dt),
+        "D": jnp.ones((n_heads,), dt),
+        "dt_bias": jnp.zeros((n_heads,), dt),
+        "out_norm": cm.rms_init(d_inner, dt),
+        "out_proj": cm.dense_init(ks[2], d_inner, cfg.d_model, dtype=dt),
+    }
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width K. xbc (B,S,C); state (B,K-1,C) or None.
+    Returns (out (B,S,C), new_state (B,K-1,C))."""
+    kw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(kw)) + b
+    new_state = full[:, -(kw - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _segsum_decay(a_cum):
+    """L[i,j] = exp(a_cum_i - a_cum_j) masked to i >= j. a_cum (..., L).
+
+    Mask BEFORE exp: for i < j the exponent is positive (decays accumulate
+    downward), exp overflows to inf and poisons the backward pass even under
+    a post-hoc where."""
+    li = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones(li.shape[-2:], bool))
+    return jnp.exp(jnp.where(mask, li, -1e30))
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, aaq: AAQConfig = DISABLED,
+                init_state=None):
+    """SSD chunked dual form.
+    x (b,s,h,p); dt (b,s,h); A (h,) (negative); B,C (b,s,n); D (h,).
+    Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc, q = sp // chunk, chunk
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    a_bar = dtc * A[None, None, None]                       # (b,nc,q,h) <= 0
+    a_cum = jnp.cumsum(a_bar, axis=2)
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk (quadratic within chunk; MXU matmuls)
+    L = _segsum_decay(jnp.moveaxis(a_cum, -1, -2))          # (b,nc,h,q,q)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)          # (b,nc,q,q)
+    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp",
+                        L, scores, xdt)
+
+    # chunk states and inter-chunk recurrence
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)     # (b,nc,q,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xdt)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])               # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                       # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit state BEFORE chunk
+
+    s0 = init_state if init_state is not None else jnp.zeros((b, h, p, n), x.dtype)
+    s0 = s0.astype(x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b,nc,h,p,n)
+    prev_states = aaq.act(prev_states, "ssm.state")
+
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cc, prev_states, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    y = y + x[:, :s] * D[None, None, :, None]
+    return y, final
+
+
+def ssm_block_apply(p, x, cfg: ArchConfig, *, positions=None, cache=None,
+                    aaq: AAQConfig = DISABLED, mlp_fn=None):
+    """Full mamba2 block: norm -> in_proj -> conv -> SSD -> gated out."""
+    s = cfg.ssm
+    d_inner, n_heads, n, hd = _dims(cfg)
+    b, sl, _ = x.shape
+    h = cm.rmsnorm(p["norm"], aaq.act(x, "lm.pre_ln"))
+    zxbcdt = cm.dense(p["in_proj"], h)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:2 * d_inner + 2 * n]
+    dt_raw = zxbcdt[..., -n_heads:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    conv_state = cache.get("conv") if cache else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xs = xbc[..., :d_inner].reshape(b, sl, n_heads, hd)
+    Bm = xbc[..., d_inner:d_inner + n]
+    Cm = xbc[..., d_inner + n:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        y, _ = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           p["D"].astype(jnp.float32), s.chunk, aaq)
+        new_cache = None
+    else:
+        st = cache["state"].astype(jnp.float32)              # (b,h,p,n)
+        dA = jnp.exp(dt[:, 0] * A[None])                     # (b,h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xs[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+        st = st * dA[..., None, None] + upd
+        st = aaq.act(st, "ssm.state")
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), st)
+        y = y + xs[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+        y = y[:, None]                                       # (b,1,h,p)
+        new_cache = {"state": st.astype(cache["state"].dtype),
+                     "conv": new_conv}
+    y = y.reshape(b, sl, d_inner).astype(x.dtype)
+    y = cm.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    return x + cm.dense(p["out_proj"], y), new_cache
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    s = cfg.ssm
+    d_inner, n_heads, n, hd = _dims(cfg)
+    dt = dtype or cfg.np_dtype
+    conv_dim = d_inner + 2 * n
+    return {
+        "state": jnp.zeros((cfg.layers, batch, n_heads, hd, n), dt),
+        "conv": jnp.zeros((cfg.layers, batch, s.conv_width - 1, conv_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }

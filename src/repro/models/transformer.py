@@ -1,0 +1,329 @@
+"""Generic decoder-only transformer covering the dense/vlm members of the
+zoo (and the attention blocks reused by moe/hybrid/encdec models).
+
+Features: GQA with decoupled head_dim, optional QKV bias, RoPE (partial
+rotary for ChatGLM's 2D scheme), RMS/LayerNorm, (Si/Ge)GLU MLPs, sliding
+window, scan-over-layers with stacked params, ring-buffer KV cache for
+decode, and AAQ hooks: the KV cache and the residual stream can be routed
+through token-wise quantization (beyond-paper application, see DESIGN §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import AAQConfig, DISABLED
+from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.models import common as cm
+from repro.parallel.sharding import constrain as _constrain
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_attn(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.hd
+    dt = cfg.np_dtype
+    return {
+        "q": cm.dense_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "k": cm.dense_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "v": cm.dense_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "o": cm.dense_init(ks[3], cfg.n_heads * hd, d, dtype=dt),
+    }
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.np_dtype
+    p = {"up": cm.dense_init(ks[0], d, f, dtype=dt),
+         "down": cm.dense_init(ks[1], f, d, dtype=dt)}
+    if cfg.act.endswith("_glu"):
+        p["gate"] = cm.dense_init(ks[2], d, f, dtype=dt)
+    return p
+
+
+def _norm_init(cfg: ArchConfig):
+    return (cm.rms_init if cfg.norm == "rms" else cm.ln_init)(cfg.d_model, cfg.np_dtype)
+
+
+def init_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": _norm_init(cfg),
+        "attn": init_attn(k1, cfg),
+        "mlp_norm": _norm_init(cfg),
+        "mlp": init_mlp(k2, cfg),
+    }
+
+
+def init_lm(key, cfg: ArchConfig, init_block_fn=None) -> Params:
+    init_block_fn = init_block_fn or init_block
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    dt = cfg.np_dtype
+    p: Params = {
+        "embed": cm.embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "final_norm": _norm_init(cfg),
+    }
+    if cfg.scan_layers:
+        keys = jax.random.split(k_blocks, cfg.layers)
+        p["blocks"] = jax.vmap(partial(init_block_fn, cfg=cfg))(keys)
+    else:
+        keys = jax.random.split(k_blocks, cfg.layers)
+        p["blocks"] = [init_block_fn(k, cfg=cfg) for k in keys]
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_init(k_head, cfg.d_model, cfg.vocab, dtype=dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+def apply_norm(p, x, cfg: ArchConfig):
+    return (cm.rmsnorm if cfg.norm == "rms" else cm.layernorm)(p, x)
+
+
+def mlp_apply(p, x, cfg: ArchConfig, d_ff: int | None = None):
+    act = {"silu_glu": jax.nn.silu, "gelu_glu": jax.nn.gelu,
+           "gelu": jax.nn.gelu, "relu": jax.nn.relu}[cfg.act]
+    if cfg.act.endswith("_glu"):
+        h = act(cm.dense(p["gate"], x)) * cm.dense(p["up"], x)
+    else:
+        h = act(cm.dense(p["up"], x))
+    return cm.dense(p["down"], h)
+
+
+def attn_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+               aaq: AAQConfig = DISABLED, causal=True, window=None,
+               bias=None):
+    """Returns (out, new_cache). cache = {'k','v'} ring buffers (B,W,Hkv,hd).
+
+    AAQ-on-KV (beyond-paper): new K/V rows are fake-quantized token-wise
+    before entering the cache — the decode-bandwidth optimization analysed
+    in EXPERIMENTS.md §Perf.
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = cm.dense(p["q"], x).reshape(b, s, hq, hd)
+    k = cm.dense(p["k"], x).reshape(b, s, hkv, hd)
+    v = cm.dense(p["v"], x).reshape(b, s, hkv, hd)
+    if cfg.rotary_frac > 0:
+        q = cm.apply_rope(q, positions, cfg.rope_theta, cfg.rotary_frac)
+        k = cm.apply_rope(k, positions, cfg.rope_theta, cfg.rotary_frac)
+    k = aaq.act(k, "lm.kv_cache")
+    v = aaq.act(v, "lm.kv_cache")
+    window = window if window is not None else cfg.window
+    if cache is None:
+        o = mha_chunked(q, k, v, bias=bias, causal=causal, window=window)
+        new_cache = None
+    else:
+        # decode: write s(=1) new rows at ring position, attend over buffer
+        w = cache["k"].shape[1]
+        pos = positions[0, 0] if positions.ndim > 1 else positions[0]
+        slot = (pos % w).astype(jnp.int32)
+        quantized = "k_scale" in cache
+        if quantized:
+            # AAQ-on-KV (INT8 rows + per-token scales): halves decode HBM
+            # traffic — the paper's quantizer applied to the serving cache
+            kq, ks = _quant_kv_row(k)
+            vq, vs = _quant_kv_row(v)
+        else:
+            kq, vq = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        # constrain updates to the cache layout — without this GSPMD hits
+        # "involuntary full rematerialization" (replicates the whole cache)
+        kq = _constrain(kq, "kv_cache")
+        vq = _constrain(vq, "kv_cache")
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], kq.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], vq.astype(cache["v"].dtype), (0, slot, 0, 0))
+        ck = _constrain(ck, "kv_cache")
+        cv = _constrain(cv, "kv_cache")
+        valid = jnp.minimum(pos + 1, w)
+        kvlen = jnp.full((b,), valid, jnp.int32)
+        new_cache = {"k": ck, "v": cv}
+        if quantized:
+            cks = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, slot, 0, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, slot, 0, 0))
+            kd = ck.astype(q.dtype) * cks.astype(q.dtype)
+            vd = cv.astype(q.dtype) * cvs.astype(q.dtype)
+            new_cache.update({"k_scale": cks, "v_scale": cvs})
+        else:
+            kd, vd = ck.astype(q.dtype), cv.astype(q.dtype)
+        o = mha_ref(q, kd, vd, kv_valid_len=kvlen, causal=False)
+    o = o.reshape(b, s, hq * hd)
+    return cm.dense(p["o"], o), new_cache
+
+
+def _quant_kv_row(x, bits: int = 8):
+    """Token-wise symmetric INT8 over the head dim: (B,S,H,hd) ->
+    (int8 values, f32 scales (B,S,H,1))."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(m / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def block_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+                aaq: AAQConfig = DISABLED, mlp_fn=None):
+    h = aaq.act(x, "lm.pre_ln")           # residual stream (Group A analogue)
+    a, new_cache = attn_apply(p["attn"], apply_norm(p["attn_norm"], h, cfg),
+                              cfg, positions=positions, cache=cache, aaq=aaq)
+    x = x + a
+    mlp_in = apply_norm(p["mlp_norm"], aaq.act(x, "lm.pre_ln"), cfg)
+    x = x + (mlp_fn or mlp_apply)(p["mlp"], mlp_in, cfg)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# full model: train forward / prefill / decode
+# --------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Token embedding; VLM stub prepends precomputed patch embeddings."""
+    x = cm.embed(params["embed"], batch["tokens"])
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def _unembed(params, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return jnp.dot(x, params["embed"]["e"].astype(x.dtype).T,
+                       preferred_element_type=jnp.float32)
+    return jnp.dot(x, params["lm_head"]["w"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+
+
+def lm_hidden(params, batch, cfg: ArchConfig, *, aaq: AAQConfig = DISABLED,
+              block_fn=None, remat=False):
+    """Full-sequence forward -> final hidden states (B, S, D)."""
+    block_fn = block_fn or block_apply
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    x = _constrain(x, "residual")
+    if cfg.scan_layers:
+        def body(carry, p):
+            y, _ = block_fn(p, carry, cfg, positions=positions, aaq=aaq)
+            return _constrain(y, "residual"), None
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for p in params["blocks"]:
+            x, _ = block_fn(p, x, cfg, positions=positions, aaq=aaq)
+            x = _constrain(x, "residual")
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x
+
+
+def lm_forward(params, batch, cfg: ArchConfig, *, aaq: AAQConfig = DISABLED,
+               block_fn=None, remat=False, last_only=False):
+    """Full-sequence forward -> logits (B, S, V) (or last position only —
+    the serving-prefill case, which avoids the (B, S, V) logits tensor)."""
+    x = lm_hidden(params, batch, cfg, aaq=aaq, block_fn=block_fn, remat=remat)
+    if last_only:
+        x = x[:, -1:]
+    return _constrain(_unembed(params, x, cfg), "logits")
+
+
+def chunked_xent(params, x, labels, cfg: ArchConfig, chunk: int = 1024):
+    """Cross-entropy without materializing full (B, S, V) logits: the
+    unembed+softmax runs per sequence chunk under jax.checkpoint, so peak
+    logits memory is (B, chunk, V) and the backward recomputes per chunk."""
+    b, s, d = x.shape
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    xc = jnp.swapaxes(x.reshape(b, nc, chunk, d), 0, 1)      # (nc,B,chunk,D)
+    lc = jnp.swapaxes(labels.reshape(b, nc, chunk), 0, 1)
+
+    @jax.checkpoint
+    def one(args):
+        xx, ll = args
+        logits = _constrain(_unembed(params, xx, cfg), "logits")
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, ll[..., None], axis=-1)[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    sums, counts = jax.lax.map(one, (xc, lc))
+    return jnp.sum(sums) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def lm_loss(params, batch, cfg: ArchConfig, *, aaq: AAQConfig = DISABLED,
+            block_fn=None, remat=True):
+    x = lm_hidden(params, batch, cfg, aaq=aaq, block_fn=block_fn, remat=remat)
+    labels = batch["labels"]
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        x = x[:, cfg.n_image_tokens:]                         # text positions
+    return chunked_xent(params, x, labels, cfg)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
+               quantized: bool = False) -> Params:
+    """Ring-buffer KV cache. SWA archs only ever allocate `window` rows —
+    this is what makes long_500k feasible for mixtral/recurrentgemma.
+
+    ``quantized=True``: AAQ serving cache — INT8 rows + per-token f32
+    scales (~2.2x fewer bytes than bf16; §Perf hillclimb)."""
+    w = min(max_len, cfg.window) if cfg.window else max_len
+    dt = dtype or cfg.np_dtype
+    shape = (cfg.layers, batch, w, cfg.n_kv_heads, cfg.hd)
+    if quantized:
+        sshape = (cfg.layers, batch, w, cfg.n_kv_heads, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32),
+                "pos": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, batch, cache, cfg: ArchConfig, *,
+                aaq: AAQConfig = DISABLED, block_fn=None):
+    """One-token decode. batch['tokens'] (B,1); cache from init_cache.
+
+    Structure-agnostic: every cache entry except 'pos' must have a leading
+    layer axis; the per-layer slice is handed to ``block_fn`` (works for the
+    dense {'k','v'} cache and the MLA {'latent','k_rope'} cache alike).
+    """
+    block_fn = block_fn or block_apply
+    x = cm.embed(params["embed"], batch["tokens"])            # (B,1,D)
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+
+    if cfg.scan_layers:
+        def body(carry, layer):
+            p, lc = layer
+            y, nc = block_fn(p, carry, cfg, positions=positions,
+                             cache=lc, aaq=aaq)
+            return y, nc
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], layer_caches))
+    else:
+        outs = []
+        for li, p in enumerate(params["blocks"]):
+            lc = jax.tree.map(lambda a: a[li], layer_caches)
+            x, nc = block_fn(p, x, cfg, positions=positions, cache=lc, aaq=aaq)
+            outs.append(nc)
+        new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _unembed(params, x, cfg)
+    new_cache = dict(new_kv)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,52 @@
+"""AAQ gradient compression with error feedback — the paper's token-wise
+quantizer applied beyond-paper to the cross-pod gradient reduction.
+
+At 1000+ nodes the pod-level all-reduce rides the slow DCN tier; token-wise
+INT8 quantization of the gradient (each row of a weight matrix is a 'token')
+halves the wire bytes vs bf16 and quarters them vs f32, and the error-
+feedback residual keeps SGD convergence unbiased in the long run
+(Karimireddy et al., 2019 discipline).
+
+Usage (inside a shard_mapped train step, or as a grads->grads transform):
+
+    state = init_state(params)
+    grads, state = compress_decompress(grads, state, bits=8)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import fake_quant
+
+
+def init_state(params):
+    """Error-feedback residuals, one per parameter."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_one(g, r, bits: int, k_outliers: int):
+    gf = g.astype(jnp.float32) + r
+    flat = gf.reshape(-1, gf.shape[-1]) if gf.ndim > 1 else gf.reshape(1, -1)
+    q = fake_quant(flat, bits, k_outliers).reshape(gf.shape)
+    return q.astype(g.dtype), gf - q
+
+
+def compress_decompress(grads, state, bits: int = 8, k_outliers: int = 0):
+    """Quantize (what the wire would carry) + keep the residual locally."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(state)
+    outs = [_quant_one(g, r, bits, k_outliers)
+            for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_r
+
+
+def wire_bytes(params, bits: int = 8) -> int:
+    """Bytes a compressed cross-pod reduction moves (for the roofline)."""
+    total = 0
+    for p in jax.tree_util.tree_leaves(params):
+        rows = p.size // p.shape[-1] if p.ndim > 1 else 1
+        total += p.size * bits // 8 + rows * 4       # + per-row scale
+    return total

@@ -1,0 +1,50 @@
+"""Elastic scaling: resume a run on a different device count / mesh shape.
+
+Checkpoints are mesh-agnostic (host-view arrays); elasticity is therefore:
+  1. build a new mesh from whatever devices exist,
+  2. recompute PartitionSpecs from the SAME logical rules on the new mesh,
+  3. device_put the restored pytree (checkpoint.restore(shardings=...)),
+  4. deterministically re-shard the data stream (ShardInfo.reshard).
+
+Scale-down of the data axis changes per-host batch, not global batch:
+global batch is part of training semantics and is preserved by raising
+gradient-accumulation microbatches proportionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.checkpoint import checkpointing as ckpt
+from repro.data.pipeline import ShardInfo
+from repro.launch.mesh import make_mesh
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    microbatch_scale: int          # multiply train_microbatches by this
+    shard: ShardInfo
+
+
+def plan_for_devices(n_devices: int, model_parallel: int,
+                     old_data: int, host_rank: int = 0,
+                     n_hosts: int = 1) -> ElasticPlan:
+    """Pick a mesh for the surviving device set, keeping TP fixed (weights
+    layouts stay valid) and absorbing lost data-ranks into microbatching."""
+    assert n_devices % model_parallel == 0
+    data = n_devices // model_parallel
+    scale = max(1, old_data // data)
+    return ElasticPlan((data, model_parallel), ("data", "model"), scale,
+                       ShardInfo(host_rank, n_hosts))
+
+
+def resume_elastic(ckpt_dir: str, template, plan: ElasticPlan, cfg=None):
+    """Restore the latest checkpoint onto the new mesh."""
+    mesh = make_mesh(plan.mesh_shape, plan.mesh_axes)
+    shardings = sh.param_shardings(template, mesh, cfg)
+    step, tree = ckpt.restore(ckpt_dir, template, shardings=shardings)
+    return step, tree, mesh

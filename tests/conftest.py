@@ -1,0 +1,11 @@
+# Tests run against the REAL device set (1 CPU device) — the 512-device
+# XLA flag is set ONLY inside launch/dryrun.py and in the dedicated
+# multi-device subprocess tests, never globally here.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

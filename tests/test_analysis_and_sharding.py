@@ -1,0 +1,153 @@
+"""Tests for the loop-aware HLO analyzer, sharding rules, schemes, steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduce_config
+from repro.configs.base import LM_SHAPES
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel import sharding as sh
+
+
+# --------------------------------------------------------------------------
+# HLO analyzer
+# --------------------------------------------------------------------------
+def test_analyzer_counts_loop_trips_exactly():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    c = jax.jit(f).lower(jnp.ones((32, 64)), jnp.ones((64, 64))).compile()
+    mc = ha.analyze_hlo(c.as_text())
+    assert mc.flops == pytest.approx(7 * 2 * 32 * 64 * 64, rel=0.01)
+    assert ("", 7) == ("", dict(mc.loops)[mc.loops[0][0]])
+
+
+def test_analyzer_vs_xla_on_loop_free_graph():
+    """No loops -> analyzer dot flops == XLA's cost analysis flops."""
+    def f(x, w):
+        return jnp.sum(x @ w)
+    c = jax.jit(f).lower(jnp.ones((128, 256)), jnp.ones((256, 64))).compile()
+    mc = ha.analyze_hlo(c.as_text())
+    xla = c.cost_analysis()
+    xla = xla[0] if isinstance(xla, list) else xla
+    assert mc.flops == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+    assert mc.flops <= float(xla["flops"]) * 1.05 + 1e5
+
+
+def test_roofline_bottleneck_selection():
+    mc = ha.ModuleCost(flops=197e12, bytes=819e9 * 10, coll={}, coll_counts={},
+                       loops=[])
+    rl = ha.roofline_from_module(mc, chips=1, model_flops=197e12)
+    assert rl.bottleneck == "memory"
+    assert rl.t_memory == pytest.approx(10.0)
+    assert rl.roofline_fraction == pytest.approx(0.1)
+
+
+def test_model_flops_estimate():
+    assert ha.model_flops_estimate(1e9, 1e6, "train") == 6e15
+    assert ha.model_flops_estimate(1e9, 1e6, "decode", n_active=5e8) == 1e15
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+MESH = make_mesh((1, 1), ("data", "model"))
+
+
+def _mesh16():
+    # abstract 16x16 rule evaluation without devices: use an AbstractMesh
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_param_spec_col_row_rules():
+    mesh = _mesh16()
+    assert sh.param_spec("blocks.attn.q.w", (1024, 2048), mesh) == \
+        jax.sharding.PartitionSpec(None, "model")
+    big = sh.param_spec("blocks.attn.q.w", (4096, 4096), mesh)
+    assert big == jax.sharding.PartitionSpec(("data",), "model")
+    assert sh.param_spec("blocks.attn.o.w", (2048, 1024), mesh) == \
+        jax.sharding.PartitionSpec("model", None)
+
+
+def test_param_spec_expert_rules():
+    mesh = _mesh16()
+    # 64 experts divisible by 16 -> EP
+    spec = sh.param_spec("blocks.mlp.experts.up.w", (64, 2048, 1408), mesh)
+    assert spec[0] == "model"
+    # 8 experts not divisible -> TP inside expert
+    spec = sh.param_spec("blocks.mlp.experts.up.w", (8, 6144, 16384), mesh)
+    assert spec[0] is None and spec[2] == "model"
+
+
+def test_param_spec_divisibility_guard():
+    mesh = _mesh16()
+    spec = sh.param_spec("blocks.attn.q.w", (100, 102), mesh)  # indivisible
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_cache_specs_match_cache_structure():
+    mesh = _mesh16()
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        for shape in LM_SHAPES:
+            if shape.step != "decode":
+                continue
+            specs = sh.cache_specs(cfg, shape, mesh)
+            cache = jax.eval_shape(
+                lambda: lm.make_cache(cfg, shape.global_batch, 64))
+            jax.tree.map(lambda spec, leaf: None, specs, cache,
+                         is_leaf=lambda x: isinstance(
+                             x, jax.sharding.PartitionSpec))
+
+
+def test_stacked_param_shardings_shift():
+    mesh = _mesh16()
+    tree = {"blocks": {"attn": {"q": {"w": jax.ShapeDtypeStruct(
+        (24, 1024, 2048), jnp.bfloat16)}}}}
+    shd = sh.param_shardings(tree, mesh, None)
+    spec = shd["blocks"]["attn"]["q"]["w"].spec
+    assert spec[0] is None and spec[-1] == "model"
+
+
+# --------------------------------------------------------------------------
+# steps: gradient accumulation correctness
+# --------------------------------------------------------------------------
+def test_microbatched_grads_match_full_batch():
+    cfg = reduce_config(get_config("qwen1.5-0.5b")).replace(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    opt = adamw.init(params)
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (4, 16), 0, cfg.vocab)}
+    s1 = make_train_step(cfg, microbatches=1)
+    s4 = make_train_step(cfg, microbatches=4)
+    p1, o1, m1 = s1(params, opt, batch)
+    p4, o4, m4 = s4(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 5e-5
+
+
+def test_train_step_decreases_loss_on_learnable_data():
+    from repro.data.pipeline import SyntheticLM
+    cfg = reduce_config(get_config("qwen1.5-0.5b")).replace(dtype="float32")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    data = SyntheticLM(cfg.vocab, 32, 8, seed=0)
+    step = jax.jit(make_train_step(
+        cfg, adamw.AdamWConfig(lr=3e-3, weight_decay=0.0)))
+    losses = []
+    for i in range(40):
+        b = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, losses

@@ -1,0 +1,114 @@
+"""PPM system tests: trunk correctness, AAQ fidelity (the paper's Fig-13
+protocol at smoke scale), TM-score metric properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import reduce_ppm_config
+from repro.core import make_scheme
+from repro.models.ppm import (init_ppm, pair_activation_inventory,
+                              ppm_forward, tm_score)
+from repro.models.ppm.structure import kabsch_align, rmsd
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+CFG = reduce_ppm_config()
+KEY = jax.random.PRNGKey(0)
+PARAMS = init_ppm(KEY, CFG)
+AATYPE = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0, 20)
+OUT_FP = ppm_forward(PARAMS, AATYPE, CFG)
+
+
+def test_forward_shapes_and_finite():
+    n = AATYPE.shape[1]
+    assert OUT_FP["coords"].shape == (1, n, 3)
+    assert OUT_FP["distogram"].shape == (1, n, n, CFG.distogram_bins)
+    for k in ("coords", "distogram", "s", "z"):
+        assert not bool(jnp.any(jnp.isnan(OUT_FP[k]))), k
+
+
+def test_distogram_symmetric():
+    d = np.asarray(OUT_FP["distogram"])
+    np.testing.assert_allclose(d, np.swapaxes(d, 1, 2), rtol=1e-4, atol=1e-4)
+
+
+def test_aaq_preserves_structure():
+    """Relative protocol of Fig. 13: TM(AAQ coords, FP coords) ~ 1."""
+    out_q = ppm_forward(PARAMS, AATYPE, CFG, make_scheme("lightnobel_aaq"))
+    tm = float(tm_score(out_q["coords"][0], OUT_FP["coords"][0]))
+    assert tm > 0.95, tm
+
+
+def test_scheme_fidelity_ordering():
+    """AAQ (mixed 4/8-bit) beats the INT4 no-outlier schemes on fidelity."""
+    tms = {}
+    for name in ("lightnobel_aaq", "tender", "mefold"):
+        out = ppm_forward(PARAMS, AATYPE, CFG, make_scheme(name))
+        tms[name] = float(tm_score(out["coords"][0], OUT_FP["coords"][0]))
+    assert tms["lightnobel_aaq"] >= tms["tender"] - 1e-3
+    assert tms["lightnobel_aaq"] >= tms["mefold"] - 1e-3
+
+
+def test_recycling_changes_output():
+    import dataclasses
+    cfg2 = dataclasses.replace(CFG, recycles=2)
+    out2 = ppm_forward(PARAMS, AATYPE, cfg2)
+    assert float(jnp.max(jnp.abs(out2["coords"] - OUT_FP["coords"]))) > 1e-4
+
+
+def test_activation_inventory_covers_groups():
+    inv = pair_activation_inventory(CFG, ns=16)
+    sites = {s for s, _ in inv}
+    assert any(s.endswith(".pre_ln") for s in sites)       # Group A
+    assert any(s.endswith(".post_ln") for s in sites)      # Group B
+    assert any(s.endswith(".ab") or s.endswith(".proj_in") for s in sites)  # C
+    for _, shape in inv:
+        assert len(shape) == 4 and shape[1] == shape[2] == 16
+
+
+# ---------------------------------------------------------------------------
+# TM-score metric properties
+# ---------------------------------------------------------------------------
+@st.composite
+def coords(draw):
+    n = draw(st.integers(8, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n, 3))) * 5
+
+
+@given(coords())
+def test_tm_self_is_one(P):
+    assert float(tm_score(jnp.asarray(P), jnp.asarray(P))) == pytest.approx(1.0, abs=1e-5)
+
+
+@given(coords(), st.integers(0, 2**31 - 1))
+def test_tm_invariant_under_rigid_motion(P, seed):
+    key = jax.random.PRNGKey(seed)
+    # random rotation via QR of a gaussian
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (3, 3)))
+    q = q * jnp.sign(jnp.linalg.det(q))          # proper rotation
+    t = jax.random.normal(jax.random.fold_in(key, 1), (3,)) * 10
+    P2 = jnp.asarray(P) @ q.T + t
+    tm = float(tm_score(P2, jnp.asarray(P)))
+    assert tm > 0.999
+    assert float(rmsd(P2, jnp.asarray(P))) < 1e-3
+
+
+@given(coords())
+def test_tm_bounded(P):
+    Q = np.asarray(P) + np.random.default_rng(0).normal(size=P.shape)
+    tm = float(tm_score(jnp.asarray(Q), jnp.asarray(P)))
+    assert 0.0 <= tm <= 1.0
+
+
+def test_kabsch_aligns_exactly():
+    P = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (32, 3)))
+    theta = 0.7
+    R = np.array([[np.cos(theta), -np.sin(theta), 0],
+                  [np.sin(theta), np.cos(theta), 0], [0, 0, 1]])
+    Q = P @ R.T + np.array([1.0, -2.0, 3.0])
+    aligned = np.asarray(kabsch_align(jnp.asarray(P), jnp.asarray(Q)))
+    np.testing.assert_allclose(aligned, Q, atol=1e-4)
