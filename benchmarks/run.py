@@ -12,15 +12,18 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (accuracy, compute_cost, footprint, latency,
-                            peak_memory)
-    for mod, label in ((footprint, "Table 1 (memory footprint)"),
-                       (accuracy, "Fig 13 (TM-score) + §4.1 RMSE"),
-                       (peak_memory, "Fig 15 (peak memory)"),
-                       (compute_cost, "Fig 16a (compute cost)"),
-                       (latency, "Fig 14 (latency scaling)")):
+                            peak_memory, serving)
+    for mod, label, argv in (
+            (footprint, "Table 1 (memory footprint)", None),
+            (accuracy, "Fig 13 (TM-score) + §4.1 RMSE", None),
+            (peak_memory, "Fig 15 (peak memory)", None),
+            (compute_cost, "Fig 16a (compute cost)", None),
+            (latency, "Fig 14 (latency scaling)", None),
+            (serving, "serving throughput (engine vs sequential)",
+             ["--n", "8", "--max-len", "48"])):
         print(f"# --- {label} ---", flush=True)
         try:
-            mod.main()
+            mod.main(argv) if argv is not None else mod.main()
         except Exception as e:                      # pragma: no cover
             traceback.print_exc()
             print(f"{mod.__name__},0,ERROR:{e}")

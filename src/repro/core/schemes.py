@@ -17,6 +17,7 @@ scales); MEFold = weight-only INT4. AAQ is the paper's scheme built on
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,21 @@ class QuantScheme:
 
     def act_bits(self, site: str, h: int) -> float:
         return 16.0
+
+    def act_bytes(self, site: str, shape: tuple[int, ...]) -> int:
+        """Bytes this scheme stores for activation ``shape`` at ``site``.
+
+        Packed-layout pricing (the paper's Table-1 accounting): tokens are
+        the leading dims, the feature dim is last; ``act_bits`` already
+        amortizes per-token scale + outlier overhead into bits-per-value.
+        Serving admission control (repro.serving.admission) uses this to
+        turn the static footprint table into a live scheduling signal.
+        """
+        h = int(shape[-1])
+        n_tokens = 1
+        for d in shape[:-1]:
+            n_tokens *= int(d)
+        return int(math.ceil(n_tokens * h * self.act_bits(site, h) / 8.0))
 
     def weight_bits(self) -> float:
         return 16.0

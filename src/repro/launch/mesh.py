@@ -5,20 +5,26 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only where the installed JAX has ``AxisType``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
     Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis rides
     the slow inter-pod links (DCN) — DP or pipeline stages go there."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh for tests / elastic re-meshing."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int | None = None):

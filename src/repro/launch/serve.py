@@ -1,14 +1,18 @@
 """Serving launcher — the paper's workload class (inference).
 
 Two services:
-  * ``--mode ppm``  — batched protein folding: requests are amino-acid
-    sequences, responses are 3-D coordinates + distogram, run under a
-    quantization scheme (default AAQ) with per-request TM-vs-FP fidelity
-    reporting (the paper's Fig. 1/13 demo).
+  * ``--mode ppm``  — protein folding through the continuous-batching
+    ``FoldEngine`` (repro.serving): length-bucketed compilation (one
+    executable per (bucket, scheme)), token-budget batching, AAQ-aware
+    admission control, per-request queue-wait/latency/TM-vs-FP reporting.
+    ``--no-engine`` keeps the one-request-at-a-time fallback (same bucket
+    padding, so both paths produce bitwise-identical real-token coords).
   * ``--mode lm``   — batched token serving for any zoo arch: prefill once,
     then steady-state decode with the ring KV cache (AAQ-on-KV optional).
 
-    PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 4
+    PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8
+    PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8 \
+        --max-tokens-per-batch 256 --mem-budget-mb 64 --buckets 32,64
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
 """
 from __future__ import annotations
@@ -26,27 +30,83 @@ from repro.core.policy import AAQConfig, DISABLED
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
+from repro.serving import (CSV_HEADER, FoldEngine, csv_row, pad_to_bucket,
+                           parse_buckets)
+
+
+def _sample_trace(args) -> list[np.ndarray]:
+    sampler = ProteinSampler(seed=11, min_len=args.min_len,
+                             max_len=args.max_len)
+    return [sampler.sample(i) for i in range(args.n)]
+
+
+def _serve_ppm_sequential(args, cfg, params, seqs, buckets) -> int:
+    """Fallback path: one request at a time, but properly bucketed+jitted —
+    the jitted forward is actually *called* (the old demo loop built ``fwd``
+    and then bypassed it, re-tracing every request) and requests are padded
+    to bucket edges so XLA compiles once per bucket, not once per length."""
+    scheme = make_scheme(args.scheme)
+    fwd = jax.jit(lambda p, a, m: ppm_forward(p, a, cfg, scheme, mask=m))
+    fwd_fp = None
+    if not args.no_fidelity:
+        fwd_fp = jax.jit(lambda p, a, m: ppm_forward(p, a, cfg, mask=m))
+    print("request,len,bucket,latency_ms,tm_vs_fp")
+    for i, seq in enumerate(seqs):
+        bucket = next((b for b in buckets if len(seq) <= b), None)
+        if bucket is None:
+            print(f"{i},{len(seq)},,rejected:too-long,")
+            continue
+        aat, mask = pad_to_bucket([seq], bucket)
+        aat, mask = jnp.asarray(aat), jnp.asarray(mask)
+        t0 = time.perf_counter()
+        out = fwd(params, aat, mask)
+        jax.block_until_ready(out["coords"])
+        ms = (time.perf_counter() - t0) * 1e3
+        tm = ""
+        if fwd_fp is not None:
+            out_fp = fwd_fp(params, aat, mask)
+            tm = f"{float(tm_score(out['coords'][0, :len(seq)], out_fp['coords'][0, :len(seq)])):.4f}"
+        print(f"{i},{len(seq)},{bucket},{ms:.1f},{tm}")
+    return 0
 
 
 def serve_ppm(args):
     cfg = reduce_ppm_config()
     params = init_ppm(jax.random.PRNGKey(0), cfg)
-    scheme = make_scheme(args.scheme)
-    sampler = ProteinSampler(seed=11, min_len=args.min_len,
-                             max_len=args.max_len)
-    fwd = jax.jit(lambda p, a, s=None: ppm_forward(p, a, cfg, s),
-                  static_argnames=())
-    print("request,len,latency_ms,tm_vs_fp")
-    for i in range(args.n):
-        seq = sampler.sample(i)
-        aatype = jnp.asarray(seq)[None]
-        t0 = time.perf_counter()
-        out = ppm_forward(params, aatype, cfg, scheme)
-        jax.block_until_ready(out["coords"])
-        ms = (time.perf_counter() - t0) * 1e3
-        out_fp = ppm_forward(params, aatype, cfg)
-        tm = float(tm_score(out["coords"][0], out_fp["coords"][0]))
-        print(f"{i},{len(seq)},{ms:.1f},{tm:.4f}")
+    seqs = _sample_trace(args)
+    try:
+        buckets = parse_buckets(args.buckets, args.min_len, args.max_len)
+    except ValueError:
+        print(f"error: --buckets must be 'pow2' or comma-separated ints, "
+              f"got {args.buckets!r}")
+        return 2
+    if args.no_engine:
+        return _serve_ppm_sequential(args, cfg, params, seqs, buckets)
+
+    engine = FoldEngine(
+        params, cfg, args.scheme, buckets=buckets,
+        max_tokens_per_batch=args.max_tokens_per_batch,
+        max_batch=args.max_batch, mem_budget_mb=args.mem_budget_mb,
+        fidelity=not args.no_fidelity)
+    if args.warmup:
+        engine.warmup()
+    results = engine.run(seqs)
+    print(CSV_HEADER)
+    for r in results:
+        print(csv_row(r))
+    s = engine.metrics.summary()
+    print(f"# served={s['served']}/{s['requests']} compiles={s['compiles']} "
+          f"req/s={s['requests_per_s']:.2f} tok/s={s['tokens_per_s']:.1f} "
+          f"max_est_act_mb={s['max_est_act_mb']:.1f}"
+          + (f" budget_mb={args.mem_budget_mb:.1f}"
+             if args.mem_budget_mb else ""))
+    for b in s["buckets"]:
+        print(f"# bucket={b['bucket']} n={b['requests']} "
+              f"compiles={b['compiles']} wait_ms={b['mean_queue_wait_ms']:.1f} "
+              f"run_ms={b['mean_run_ms']:.1f} waste={b['padding_waste']:.2f}")
+    if args.report:
+        engine.metrics.save(args.report)
+        print(f"# report -> {args.report}")
     return 0
 
 
@@ -85,6 +145,21 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=4)
     ap.add_argument("--min-len", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=64)
+    # -- ppm engine flags --
+    ap.add_argument("--no-engine", action="store_true",
+                    help="sequential fallback (no batching engine)")
+    ap.add_argument("--no-fidelity", action="store_true",
+                    help="skip the FP16-reference TM-score pass")
+    ap.add_argument("--buckets", default="pow2",
+                    help="'pow2' or comma-separated edges, e.g. '32,64,96'")
+    ap.add_argument("--max-tokens-per-batch", type=int, default=1024)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--mem-budget-mb", type=float, default=None,
+                    help="peak-activation budget for admission control")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every bucket before serving")
+    ap.add_argument("--report", default=None,
+                    help="write per-request metrics to this .csv/.json path")
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)

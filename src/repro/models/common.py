@@ -116,6 +116,19 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
 NEG_INF = -1e9
 
 
+def key_padding_bias(mask: jax.Array) -> jax.Array:
+    """(..., N) bool key mask -> additive f32 bias: 0 real, NEG_INF padded.
+
+    NEG_INF underflows to exactly 0.0 through float32 softmax's exp, so
+    padded keys contribute literal +0.0 to the normalizer — real
+    probabilities keep their unpadded bit patterns.  Every masked attention
+    path (trunk, structure module) must use THIS helper: the serving
+    engine's bitwise padded-vs-unpadded contract depends on the exact
+    constant and dtype.
+    """
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
 def causal_mask(q_len: int, kv_len: int, *, window: int | None = None,
                 q_offset: int | jax.Array = 0) -> jax.Array:
     """(q_len, kv_len) additive mask. ``window`` = sliding-window attention."""

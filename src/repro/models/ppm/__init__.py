@@ -1,3 +1,5 @@
 from repro.models.ppm.trunk import PPMConfig, init_trunk, trunk_apply, block_apply
-from repro.models.ppm.model import init_ppm, ppm_forward, pair_activation_inventory
+from repro.models.ppm.model import (init_ppm, ppm_forward,
+                                    pair_activation_inventory,
+                                    score_tensor_shape)
 from repro.models.ppm.structure import tm_score, rmsd, kabsch_align

@@ -48,18 +48,27 @@ def input_embedding(p, aatype: jax.Array, cfg: PPMConfig):
 
 
 def ppm_forward(params, aatype: jax.Array, cfg: PPMConfig,
-                scheme: QuantScheme | None = None, *, remat: bool = False):
-    """Full forward pass. Returns dict with coords, distogram, s, z."""
+                scheme: QuantScheme | None = None, *, mask: jax.Array | None = None,
+                remat: bool = False):
+    """Full forward pass. Returns dict with coords, distogram, s, z.
+
+    ``mask`` (B, N) bool marks real tokens when ``aatype`` is padded to a
+    serving bucket; ``None`` is the legacy unmasked path.  Masking is
+    non-rescaling (see trunk helpers), so coords/s at real positions are
+    bitwise identical to an unpadded forward of the same sequence.
+    """
     scheme = scheme or FP16Baseline()
+    if mask is not None:
+        mask = mask.astype(bool)
     s0, z0 = input_embedding(params, aatype, cfg)
     s, z = s0, z0
     for r in range(cfg.recycles):
         s_in = s0 + (cm.layernorm(params["recycle_s_ln"], s) if r else 0.0)
         z_in = z0 + (cm.layernorm(params["recycle_z_ln"], z) if r else 0.0)
         s, z = tk.trunk_apply(params["trunk"], s_in, z_in, cfg, scheme,
-                              remat=remat)
+                              remat=remat, mask=mask)
     coords, s_final = st.structure_apply(params["structure"], s, z,
-                                         n_iter=cfg.ipa_iters)
+                                         n_iter=cfg.ipa_iters, mask=mask)
     zsym = 0.5 * (z + jnp.swapaxes(z, 1, 2))
     distogram = cm.dense(params["distogram"], zsym)
     return {"coords": coords, "distogram": distogram, "s": s_final, "z": z}

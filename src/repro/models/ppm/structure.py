@@ -38,26 +38,39 @@ def init_structure(key, cfg) -> cm.Params:
     }
 
 
-def structure_apply(p, s, z, n_iter: int = 4):
-    """Returns (coords (B,N,3), s_final)."""
+def structure_apply(p, s, z, n_iter: int = 4, mask=None):
+    """Returns (coords (B,N,3), s_final).
+
+    ``mask`` (B, N) bool marks real tokens; padded keys are excluded from
+    attention (additive -1e9, exact 0 probability post-softmax) and their
+    values zeroed, so real-token coordinates are bitwise those of the
+    unpadded forward.
+    """
     b, n, hm = s.shape
     heads = p["pair_bias"]["w"].shape[-1]
     dh = hm // heads
     t = jnp.zeros((b, n, 3), jnp.float32)
     bias = cm.dense(p["pair_bias"], cm.layernorm(p["ln_z"], z))  # (B,N,N,H)
     bias = jnp.transpose(bias, (0, 3, 1, 2)).astype(jnp.float32)
+    key_bias = None
+    if mask is not None:
+        key_bias = cm.key_padding_bias(mask)
     for _ in range(n_iter):
         sl = cm.layernorm(p["ln_s"], s)
         q, k, v = jnp.split(cm.dense(p["qkv"], sl), 3, axis=-1)
         q = q.reshape(b, n, heads, dh)
         k = k.reshape(b, n, heads, dh)
         v = v.reshape(b, n, heads, dh)
+        if mask is not None:
+            v = v * mask[:, :, None, None].astype(v.dtype)
         d2 = jnp.sum((t[:, :, None] - t[:, None, :]) ** 2, axis=-1)  # (B,N,N)
         logits = (jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32),
                              k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
                   + bias
                   - jax.nn.softplus(p["dist_w"].astype(jnp.float32))[None, :, None, None]
                   * d2[:, None])
+        if key_bias is not None:
+            logits = logits + key_bias[:, None, None, :]
         probs = jax.nn.softmax(logits, axis=-1)
         o = jnp.einsum("bhij,bjhd->bihd", probs, v.astype(jnp.float32))
         s = s + cm.dense(p["out"], o.reshape(b, n, hm).astype(s.dtype))

@@ -113,9 +113,34 @@ def init_block(key, cfg: PPMConfig) -> cm.Params:
 
 
 # --------------------------------------------------------------------------
+# padding-mask helpers
+#
+# ``mask`` is (B, N) bool — True at real tokens.  ``mask=None`` is the
+# legacy unmasked path (bit-for-bit unchanged).  All masking is designed so
+# real-token values are *bitwise* those of the unpadded forward: real
+# entries are only ever multiplied by exactly 1.0 or summed with additive
+# 0.0 / exact-zero padded contributions, never rescaled (key masking goes
+# through cm.key_padding_bias for the same reason).
+# --------------------------------------------------------------------------
+
+# Sequence length at/above which triangular attention switches to the
+# chunked token-wise MHA path.  The serving engine's solo-bucket rule is
+# clamped to this: the chunked path's bias addressing assumes one protein
+# per flattened row-batch, so batches above this length must be size 1.
+CHUNKED_ATTN_LEN = 256
+
+
+def _pair_mask(mask):
+    """(B, N) bool -> (B, N, N, 1) float: 1.0 where both tokens are real."""
+    m = (mask[:, :, None] & mask[:, None, :])[..., None]
+    return m
+
+
+# --------------------------------------------------------------------------
 # pair ops (the paper's Fig. 6 dataflows, with AAQ sites)
 # --------------------------------------------------------------------------
-def tri_mul_apply(p, z, scheme: QuantScheme, outgoing: bool, sc: str):
+def tri_mul_apply(p, z, scheme: QuantScheme, outgoing: bool, sc: str,
+                  mask=None):
     """Triangular multiplication. sc = site prefix ('tri_mul_out' etc.)."""
     z = scheme.act(z, f"{sc}.pre_ln")                       # Group A
     zl = cm.layernorm(p["ln_in"], z)
@@ -126,6 +151,12 @@ def tri_mul_apply(p, z, scheme: QuantScheme, outgoing: bool, sc: str):
          * cm.dense(p["b_proj"], zl, scheme, f"{sc}.post_ln"))
     a = scheme.act(a, f"{sc}.ab")                           # Group C
     b = scheme.act(b, f"{sc}.ab")
+    if mask is not None:
+        # zero padded pair rows so the k-contraction below only ever adds
+        # exact zeros for padded k (real entries are multiplied by 1.0)
+        pm = _pair_mask(mask).astype(a.dtype)
+        a = a * pm
+        b = b * pm
     eq = "bikc,bjkc->bijc" if outgoing else "bkic,bkjc->bijc"
     x = jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32)).astype(z.dtype)
     x = scheme.act(x, f"{sc}.prod_pre_ln")                  # Group A (large)
@@ -137,7 +168,7 @@ def tri_mul_apply(p, z, scheme: QuantScheme, outgoing: bool, sc: str):
 
 
 def tri_attn_apply(p, z, scheme: QuantScheme, starting: bool, sc: str,
-                   heads: int):
+                   heads: int, mask=None):
     """Triangular attention; ending-node = starting-node on transposed pair."""
     if not starting:
         z = jnp.swapaxes(z, 1, 2)
@@ -151,23 +182,37 @@ def tri_attn_apply(p, z, scheme: QuantScheme, starting: bool, sc: str,
     q = q.reshape(b_, n, n, heads, dh)
     k = k.reshape(b_, n, n, heads, dh)
     v = v.reshape(b_, n, n, heads, dh)
+    if mask is not None:
+        # padded keys: zero v (their prob is already exactly 0 post-softmax,
+        # but 0 * garbage must never become NaN)
+        v = v * mask[:, None, :, None, None].astype(v.dtype)
     bias = cm.dense(p["bias"], zl, scheme, f"{sc}.post_ln")  # (B,N,N,H)
     # starting node: logits[b,h,i,j,k] = q_ij . k_ik + bias_jk
-    if n >= 256:
+    if n >= CHUNKED_ATTN_LEN:
         # token-wise MHA (paper §5.4): rows are batch, the (N,N,N) score
         # tensor never materializes — the Pallas flash kernel is the fused
         # TPU form; this is the XLA-chunked equivalent for lowering.
+        # Padding is a contiguous suffix (serving buckets), so the key mask
+        # folds into kv_valid_len. Requires B == 1: mha's bias broadcast
+        # addresses flattened rows modulo the bias batch.
         from repro.kernels.flash_attention.ref import mha_chunked
+        kv_valid = None
+        if mask is not None:
+            lens = jnp.sum(mask.astype(jnp.int32), axis=-1)          # (B,)
+            kv_valid = jnp.repeat(lens, n)                           # (B*n,)
         o = mha_chunked(q.reshape(b_ * n, n, heads, dh),
                         k.reshape(b_ * n, n, heads, dh),
                         v.reshape(b_ * n, n, heads, dh),
                         bias=jnp.transpose(bias, (0, 3, 1, 2)),
+                        kv_valid_len=kv_valid,
                         causal=False, q_chunk=512)
         o = o.reshape(b_, n, n, heads, dh).astype(z.dtype)
     else:
         logits = jnp.einsum("bijhd,bikhd->bhijk", q.astype(jnp.float32),
                             k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
         logits = logits + jnp.transpose(bias, (0, 3, 1, 2))[:, :, None].astype(jnp.float32)
+        if mask is not None:
+            logits = logits + cm.key_padding_bias(mask)[:, None, None, None, :]
         probs = jax.nn.softmax(logits, axis=-1).astype(z.dtype)
         probs = scheme.act(probs, f"{sc}.probs")            # Group C
         o = jnp.einsum("bhijk,bikhd->bijhd", probs.astype(jnp.float32),
@@ -192,7 +237,7 @@ def pair_transition_apply(p, z, scheme: QuantScheme, sc: str = "pair_trans"):
 # --------------------------------------------------------------------------
 # sequence ops (not quantized — paper quantizes only pair dataflow)
 # --------------------------------------------------------------------------
-def seq_attn_apply(p, s, z, heads: int):
+def seq_attn_apply(p, s, z, heads: int, mask=None):
     b_, n, hm = s.shape
     dh = hm // heads
     sl = cm.layernorm(p["ln"], s)
@@ -201,10 +246,14 @@ def seq_attn_apply(p, s, z, heads: int):
     q = q.reshape(b_, n, heads, dh)
     k = k.reshape(b_, n, heads, dh)
     v = v.reshape(b_, n, heads, dh)
+    if mask is not None:
+        v = v * mask[:, :, None, None].astype(v.dtype)
     bias = cm.dense(p["pair_bias"], cm.layernorm(p["pair_bias_ln"], z))
     logits = (jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32),
                          k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
               + jnp.transpose(bias, (0, 3, 1, 2)).astype(jnp.float32))
+    if mask is not None:
+        logits = logits + cm.key_padding_bias(mask)[:, None, None, :]
     probs = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhij,bjhd->bihd", probs, v.astype(jnp.float32))
     o = o.reshape(b_, n, hm).astype(s.dtype)
@@ -227,16 +276,18 @@ def opm_apply(p, s):
 # --------------------------------------------------------------------------
 # one folding block
 # --------------------------------------------------------------------------
-def block_apply(p, s, z, cfg: PPMConfig, scheme: QuantScheme):
-    s = s + seq_attn_apply(p["seq_attn"], s, z, cfg.seq_heads)
+def block_apply(p, s, z, cfg: PPMConfig, scheme: QuantScheme, mask=None):
+    s = s + seq_attn_apply(p["seq_attn"], s, z, cfg.seq_heads, mask=mask)
     s = s + seq_transition_apply(p["seq_trans"], s)
     z = z + opm_apply(p["opm"], s)
-    z = z + tri_mul_apply(p["tri_mul_out"], z, scheme, True, "tri_mul_out")
-    z = z + tri_mul_apply(p["tri_mul_in"], z, scheme, False, "tri_mul_in")
+    z = z + tri_mul_apply(p["tri_mul_out"], z, scheme, True, "tri_mul_out",
+                          mask=mask)
+    z = z + tri_mul_apply(p["tri_mul_in"], z, scheme, False, "tri_mul_in",
+                          mask=mask)
     z = z + tri_attn_apply(p["tri_attn_start"], z, scheme, True,
-                           "tri_attn_start", cfg.pair_heads)
+                           "tri_attn_start", cfg.pair_heads, mask=mask)
     z = z + tri_attn_apply(p["tri_attn_end"], z, scheme, False,
-                           "tri_attn_end", cfg.pair_heads)
+                           "tri_attn_end", cfg.pair_heads, mask=mask)
     z = z + pair_transition_apply(p["pair_trans"], z, scheme)
     return s, z
 
@@ -247,10 +298,10 @@ def init_trunk(key, cfg: PPMConfig) -> cm.Params:
 
 
 def trunk_apply(stacked, s, z, cfg: PPMConfig, scheme: QuantScheme,
-                remat: bool = False):
+                remat: bool = False, mask=None):
     def body(carry, p):
         s_, z_ = carry
-        s_, z_ = block_apply(p, s_, z_, cfg, scheme)
+        s_, z_ = block_apply(p, s_, z_, cfg, scheme, mask=mask)
         return (_constrain(s_, "seq_track"), _constrain(z_, "pair")), None
 
     if remat:

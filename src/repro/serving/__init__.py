@@ -1,0 +1,23 @@
+"""repro.serving — continuous-batching fold-serving engine.
+
+Bucketed compilation (one executable per (bucket, scheme)), token-budget
+continuous batching, and AAQ-aware admission control that turns the paper's
+Table-1 activation accounting into a live memory-budget scheduling signal.
+"""
+from repro.serving.admission import (ADMIT, DEFER, REJECT, AdmissionController,
+                                     AdmissionDecision)
+from repro.serving.engine import FoldEngine
+from repro.serving.metrics import (CSV_HEADER, CompileWatcher, EngineMetrics,
+                                   csv_row)
+from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
+                                     parse_buckets, pow2_buckets)
+from repro.serving.types import (FoldRequest, FoldResult, pad_to_bucket,
+                                 strip_padding)
+
+__all__ = [
+    "FoldEngine", "FoldRequest", "FoldResult",
+    "AdmissionController", "AdmissionDecision", "ADMIT", "DEFER", "REJECT",
+    "TokenBudgetScheduler", "ScheduledBatch", "pow2_buckets", "parse_buckets",
+    "EngineMetrics", "CompileWatcher", "CSV_HEADER", "csv_row",
+    "pad_to_bucket", "strip_padding",
+]

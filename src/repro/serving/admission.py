@@ -1,0 +1,110 @@
+"""AAQ-aware admission control: the paper's Table-1 accounting as a live
+scheduling signal.
+
+Each candidate (bucket, batch) is priced in *estimated peak activation
+bytes*: the Pair-dataflow activations one folding block holds (from
+``pair_activation_inventory``, priced at the active scheme's bits-per-value
+via ``QuantScheme.act_bytes``) plus the triangular-attention score tensor —
+the full cubic (B, H, N, N, N) fp32 tensor below the token-wise-MHA
+threshold, and only the chunked (rows, H, q_chunk, N) slab above it (paper
+§5.4).  The scheduler consults ``admit`` before growing a batch: batches
+that would exceed the budget are deferred (the request waits for a smaller
+batch), and a request whose bucket exceeds the budget even alone is
+rejected deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.schemes import QuantScheme
+from repro.models.ppm.model import pair_activation_inventory, score_tensor_shape
+from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
+
+ADMIT = "admit"
+DEFER = "defer"
+REJECT = "reject"
+
+_SCORE_DTYPE_BYTES = 4          # fp32 logits/probs in both attention paths
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    verdict: str                # ADMIT | DEFER | REJECT
+    est_bytes: int
+    budget_bytes: int | None
+    reason: str = ""
+
+
+class AdmissionController:
+    """Prices (bucket, batch) candidates against a peak-activation budget."""
+
+    def __init__(self, cfg, scheme: QuantScheme,
+                 mem_budget_bytes: int | None = None, *,
+                 chunked_len: int = CHUNKED_ATTN_LEN, q_chunk: int = 512):
+        self.cfg = cfg
+        self.scheme = scheme
+        self.mem_budget_bytes = mem_budget_bytes
+        self.chunked_len = chunked_len
+        self.q_chunk = q_chunk
+        self._cache: dict[tuple[int, int], int] = {}
+
+    # -- pricing ----------------------------------------------------------
+    def estimate_bytes(self, ns: int, batch: int = 1) -> int:
+        """Estimated peak activation bytes for one (bucket=ns, batch) step."""
+        key = (ns, batch)
+        if key not in self._cache:
+            self._cache[key] = (self._pair_bytes(ns, batch)
+                                + self._score_bytes(ns, batch)
+                                + self._residual_bytes(ns, batch))
+        return self._cache[key]
+
+    def _pair_bytes(self, ns: int, batch: int) -> int:
+        inv = pair_activation_inventory(self.cfg, ns, batch)
+        return sum(self.scheme.act_bytes(site, shape) for site, shape in inv)
+
+    def _score_bytes(self, ns: int, batch: int) -> int:
+        b, h, *_ = score_tensor_shape(self.cfg, ns, batch)
+        if ns >= self.chunked_len:
+            # token-wise MHA: rows are batch, the score slab is only ever
+            # (batch*ns, h, q_chunk, ns)
+            return batch * ns * h * min(self.q_chunk, ns) * ns * _SCORE_DTYPE_BYTES
+        return b * h * ns ** 3 * _SCORE_DTYPE_BYTES
+
+    def _residual_bytes(self, ns: int, batch: int) -> int:
+        """The pair residual stream itself (carried across blocks, fp)."""
+        itemsize = self.cfg.np_dtype.itemsize
+        return batch * ns * ns * self.cfg.hz * itemsize
+
+    # -- policy -----------------------------------------------------------
+    def admit(self, ns: int, batch: int) -> AdmissionDecision:
+        est = self.estimate_bytes(ns, batch)
+        if self.mem_budget_bytes is None or est <= self.mem_budget_bytes:
+            return AdmissionDecision(ADMIT, est, self.mem_budget_bytes)
+        if batch <= 1:
+            return AdmissionDecision(
+                REJECT, est, self.mem_budget_bytes,
+                f"bucket {ns} needs ~{est / 1e6:.1f}MB alone; "
+                f"budget {self.mem_budget_bytes / 1e6:.1f}MB")
+        return AdmissionDecision(
+            DEFER, est, self.mem_budget_bytes,
+            f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB over budget")
+
+    def max_batch_for(self, ns: int, upper: int) -> int:
+        """Largest batch <= upper within budget (0 = even batch 1 is over)."""
+        for b in range(upper, 0, -1):
+            if self.admit(ns, b).verdict == ADMIT:
+                return b
+        return 0
+
+    def explain(self, ns: int, batch: int = 1) -> dict:
+        """Breakdown for reports/debugging (MB, not bytes)."""
+        return {
+            "bucket": ns, "batch": batch,
+            "pair_mb": self._pair_bytes(ns, batch) / 1e6,
+            "score_mb": self._score_bytes(ns, batch) / 1e6,
+            "residual_mb": self._residual_bytes(ns, batch) / 1e6,
+            "total_mb": self.estimate_bytes(ns, batch) / 1e6,
+            "budget_mb": (None if self.mem_budget_bytes is None
+                          else self.mem_budget_bytes / 1e6),
+            "scheme": self.scheme.name,
+        }

@@ -1,0 +1,210 @@
+"""FoldEngine: bucketed-compilation continuous-batching PPM serving.
+
+The engine owns (params, config, scheme) and serves fold requests through
+three cooperating pieces:
+
+  * length buckets — every request is right-padded to its bucket edge, so
+    the XLA shape space is the bucket set, not the set of observed lengths;
+  * a compiled-executable cache keyed by ``(bucket, scheme)`` — each bucket
+    runs at ONE static batch size (``batch_for_bucket``: token budget,
+    max-batch cap, solo rule for token-wise-MHA lengths, and the admission
+    controller's memory cap), short batches are padded with fully-masked
+    dummy rows, so steady-state serving performs zero recompilations;
+  * the token-budget scheduler + AAQ-aware admission controller
+    (repro.serving.scheduler / .admission) deciding what runs when.
+
+Numerics contract: padding is non-rescaling masking end to end (see
+``ppm_forward``), so a request served from a padded batch yields coords
+bitwise identical to the same request padded to the same bucket at batch 1
+— which is exactly what the fixed sequential fallback computes.  Fidelity
+(``tm_vs_fp``) re-runs each batch through the cached FP16-baseline
+executable of the same bucket and TM-scores real-token coords per request.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schemes import FP16Baseline, QuantScheme, make_scheme
+from repro.models.ppm import ppm_forward, tm_score
+from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
+from repro.serving.admission import AdmissionController
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
+                                     pow2_buckets)
+from repro.serving.types import (REJECTED, FoldRequest, FoldResult,
+                                 pad_to_bucket, strip_padding)
+
+
+class FoldEngine:
+    def __init__(self, params, cfg, scheme: QuantScheme | str | None = None, *,
+                 buckets: tuple[int, ...] | None = None,
+                 max_tokens_per_batch: int = 1024, max_batch: int = 8,
+                 mem_budget_mb: float | None = None,
+                 fidelity: bool = False, solo_len: int = 256,
+                 keep_distogram: bool = True):
+        self.params = params
+        self.cfg = cfg
+        if scheme is None:
+            scheme = FP16Baseline()
+        elif isinstance(scheme, str):
+            scheme = make_scheme(scheme)
+        self.scheme = scheme
+        self.buckets = tuple(sorted(buckets or pow2_buckets(16, 512)))
+        self.max_tokens_per_batch = max_tokens_per_batch
+        self.max_batch = max_batch
+        # clamp to the model's chunked-attention threshold: any bucket at or
+        # above it MUST run solo (the chunked path's bias addressing assumes
+        # one protein per flattened row-batch — see trunk.CHUNKED_ATTN_LEN)
+        self.solo_len = min(solo_len, CHUNKED_ATTN_LEN)
+        self.fidelity = fidelity
+        self.keep_distogram = keep_distogram
+        budget = None if mem_budget_mb is None else int(mem_budget_mb * 1e6)
+        # pricing threshold is the model's, independent of the solo rule
+        self.admission = AdmissionController(cfg, self.scheme, budget,
+                                             chunked_len=CHUNKED_ATTN_LEN)
+        self.scheduler = TokenBudgetScheduler(
+            self.buckets, max_tokens_per_batch=max_tokens_per_batch,
+            max_batch=max_batch, admission=self.admission,
+            solo_len=self.solo_len)   # clamped — must match batch_for_bucket
+        self.metrics = EngineMetrics()
+        self._fp_scheme = FP16Baseline()
+        self._executables: dict[tuple[int, str], object] = {}
+        self._compile_count = 0
+        self._next_id = 0
+
+    # -- shape policy -----------------------------------------------------
+    def bucket_for(self, length: int) -> int | None:
+        return self.scheduler.bucket_for(length)
+
+    def batch_for_bucket(self, bucket: int) -> int:
+        """The ONE static batch size this bucket is compiled at."""
+        n = min(self.max_batch, max(1, self.max_tokens_per_batch // bucket))
+        if bucket >= self.solo_len:
+            n = 1
+        if self.admission.mem_budget_bytes is not None:
+            n = max(1, self.admission.max_batch_for(bucket, n))
+        return n
+
+    # -- executable cache -------------------------------------------------
+    @property
+    def compile_count(self) -> int:
+        return self._compile_count
+
+    def _executable(self, bucket: int, scheme: QuantScheme):
+        """AOT-compiled forward for (bucket, scheme); cached, counted."""
+        key = (bucket, scheme.name)
+        if key in self._executables:
+            return self._executables[key], 0.0
+        batch = self.batch_for_bucket(bucket)
+        fn = jax.jit(partial(self._forward, scheme))
+        aat = jax.ShapeDtypeStruct((batch, bucket), jnp.int32)
+        msk = jax.ShapeDtypeStruct((batch, bucket), jnp.bool_)
+        t0 = time.perf_counter()
+        compiled = fn.lower(self.params, aat, msk).compile()
+        compile_s = time.perf_counter() - t0
+        self._executables[key] = compiled
+        self._compile_count += 1
+        self.metrics.record_compile(bucket, compile_s * 1e3)
+        return compiled, compile_s
+
+    def _forward(self, scheme, params, aatype, mask):
+        return ppm_forward(params, aatype, self.cfg, scheme, mask=mask)
+
+    def warmup(self) -> None:
+        """Pre-compile every bucket (and its FP twin if fidelity is on)."""
+        for bucket in self.buckets:
+            self._executable(bucket, self.scheme)
+            if self.fidelity:
+                self._executable(bucket, self._fp_scheme)
+
+    # -- request lifecycle ------------------------------------------------
+    def submit(self, seq: np.ndarray | FoldRequest) -> int:
+        if not isinstance(seq, FoldRequest):
+            seq = FoldRequest(self._next_id, np.asarray(seq, np.int32))
+        self._next_id = max(self._next_id, seq.request_id) + 1
+        rej = self.scheduler.submit(seq, time.monotonic())
+        if rej is not None:
+            self.metrics.record(FoldResult(
+                request_id=seq.request_id, length=seq.length,
+                status=REJECTED, reason=rej.reason,
+                bucket=self.bucket_for(seq.length) or 0))
+        return seq.request_id
+
+    def step(self) -> list[FoldResult]:
+        """Serve the next scheduled batch; [] when the queue is empty."""
+        batch = self.scheduler.next_batch()
+        if batch is None or not batch.requests:
+            return []
+        return self._run_batch(batch)
+
+    def drain(self) -> list[FoldResult]:
+        out: list[FoldResult] = []
+        while self.scheduler.pending:
+            out.extend(self.step())
+        return out
+
+    def run(self, seqs, *, reset_metrics: bool = True) -> list[FoldResult]:
+        """Submit a trace, drain it, return results in request order."""
+        if reset_metrics:
+            self.metrics = EngineMetrics()
+        t0 = time.perf_counter()
+        for s in seqs:
+            self.submit(s)
+        self.drain()
+        self.metrics.wall_s = time.perf_counter() - t0
+        return sorted(self.metrics.results, key=lambda r: r.request_id)
+
+    # -- execution --------------------------------------------------------
+    def _run_batch(self, batch: ScheduledBatch) -> list[FoldResult]:
+        bucket = batch.bucket
+        static_b = self.batch_for_bucket(bucket)
+        est = self.admission.estimate_bytes(bucket, static_b)
+        batch_start = time.monotonic()    # queue wait ends here: compile and
+        compiled, compile_s = self._executable(bucket, self.scheme)  # run are
+        aat, mask = pad_to_bucket([r.aatype for r in batch.requests],  # their
+                                  bucket, static_b)                 # own cols
+        aat_j, mask_j = jnp.asarray(aat), jnp.asarray(mask)
+        t_run = time.perf_counter()
+        out = compiled(self.params, aat_j, mask_j)
+        jax.block_until_ready(out["coords"])
+        run_s = time.perf_counter() - t_run
+
+        # one device->host transfer per batch; numpy slicing after that (a
+        # device-array slice would eagerly compile per distinct length and
+        # break the zero-recompile steady state)
+        host = {"coords": np.asarray(out["coords"])}
+        if self.keep_distogram:
+            host["distogram"] = np.asarray(out["distogram"])
+        fp_coords = None
+        if self.fidelity and self.scheme.name != self._fp_scheme.name:
+            fp_exec, fp_compile_s = self._executable(bucket, self._fp_scheme)
+            compile_s += fp_compile_s
+            fp_out = fp_exec(self.params, aat_j, mask_j)
+            fp_coords = np.asarray(fp_out["coords"])
+
+        results = []
+        for row, req in enumerate(batch.requests):
+            stripped = strip_padding(host, row, req.length)
+            tm = None
+            if self.fidelity:
+                tm = 1.0 if fp_coords is None else float(tm_score(
+                    jnp.asarray(stripped["coords"]),
+                    jnp.asarray(fp_coords[row, :req.length])))
+            results.append(FoldResult(
+                request_id=req.request_id, length=req.length,
+                bucket=bucket, batch_size=len(batch.requests),
+                coords=stripped["coords"],
+                distogram=stripped["distogram"],
+                tm_vs_fp=tm,
+                queue_wait_ms=(batch_start - req.arrival_time) * 1e3,
+                compile_ms=compile_s * 1e3,
+                run_ms=run_s * 1e3,
+                est_activation_bytes=est))
+        for r in results:
+            self.metrics.record(r)
+        return results

@@ -1,0 +1,172 @@
+"""Serving telemetry: per-request records, per-bucket aggregates, and a
+backend-compile watcher (so tests can assert steady-state = zero recompiles).
+
+Report output is CSV (one row per request) or JSON (records + bucket and
+engine summaries) — the shapes the benchmarks and the serve CLI print.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import IO
+
+from repro.serving.types import FoldResult
+
+# -- compile watcher --------------------------------------------------------
+# jax.monitoring emits '/jax/core/compile/backend_compile_duration' once per
+# backend compilation.  One module-level listener feeds every watcher; the
+# engine's own cache-miss counter is the authoritative per-executable count,
+# this is the independent corroboration ("nothing else compiled either").
+_BACKEND_COMPILES = 0
+_LISTENER_INSTALLED = False
+
+
+def _install_listener() -> bool:
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return True
+    try:
+        import jax.monitoring
+
+        def _on_duration(event: str, duration: float, **kw) -> None:
+            global _BACKEND_COMPILES
+            if "backend_compile" in event:
+                _BACKEND_COMPILES += 1
+
+        jax.monitoring.register_event_duration_secs_listener(_on_duration)
+        _LISTENER_INSTALLED = True
+    except Exception:        # monitoring API moved/absent: watcher reads 0
+        pass
+    return _LISTENER_INSTALLED
+
+
+class CompileWatcher:
+    """Counts JAX backend compilations between ``mark()`` and ``delta()``."""
+
+    def __init__(self):
+        self.available = _install_listener()
+        self._mark = _BACKEND_COMPILES
+
+    def mark(self) -> None:
+        self._mark = _BACKEND_COMPILES
+
+    def delta(self) -> int:
+        return _BACKEND_COMPILES - self._mark
+
+
+# -- aggregation ------------------------------------------------------------
+@dataclasses.dataclass
+class BucketStats:
+    bucket: int
+    requests: int = 0
+    rejected: int = 0
+    tokens_real: int = 0
+    tokens_padded: int = 0
+    queue_wait_ms: float = 0.0
+    run_ms: float = 0.0
+    compile_ms: float = 0.0
+    compiles: int = 0
+
+    @property
+    def padding_waste(self) -> float:
+        if not self.tokens_padded:
+            return 0.0
+        return 1.0 - self.tokens_real / self.tokens_padded
+
+    def as_dict(self) -> dict:
+        served = max(self.requests - self.rejected, 1)
+        return {
+            "bucket": self.bucket, "requests": self.requests,
+            "rejected": self.rejected,
+            "mean_queue_wait_ms": self.queue_wait_ms / served,
+            "mean_run_ms": self.run_ms / served,
+            "compile_ms": self.compile_ms, "compiles": self.compiles,
+            "padding_waste": self.padding_waste,
+        }
+
+
+CSV_HEADER = ("request,len,bucket,batch,status,queue_ms,compile_ms,run_ms,"
+              "tm_vs_fp,padding_frac,est_act_mb")
+
+
+def csv_row(r: FoldResult) -> str:
+    tm = "" if r.tm_vs_fp is None else f"{r.tm_vs_fp:.4f}"
+    return (f"{r.request_id},{r.length},{r.bucket},{r.batch_size},{r.status},"
+            f"{r.queue_wait_ms:.1f},{r.compile_ms:.1f},{r.run_ms:.1f},{tm},"
+            f"{r.padding_frac:.3f},{r.est_activation_bytes / 1e6:.1f}")
+
+
+class EngineMetrics:
+    def __init__(self):
+        self.results: list[FoldResult] = []
+        self._buckets: dict[int, BucketStats] = {}
+        self.wall_s: float = 0.0
+
+    def record(self, r: FoldResult) -> None:
+        self.results.append(r)
+        st = self._buckets.setdefault(r.bucket, BucketStats(r.bucket))
+        st.requests += 1
+        if not r.ok:
+            st.rejected += 1
+            return
+        st.tokens_real += r.length
+        st.tokens_padded += r.bucket
+        st.queue_wait_ms += r.queue_wait_ms
+        st.run_ms += r.run_ms
+        # per-bucket compile_ms accrues once per compilation (record_compile),
+        # NOT per request — every request in a batch carries the same
+        # FoldResult.compile_ms, summing those would multiply by batch size
+
+    def record_compile(self, bucket: int, ms: float) -> None:
+        st = self._buckets.setdefault(bucket, BucketStats(bucket))
+        st.compiles += 1
+        st.compile_ms += ms
+
+    def summary(self) -> dict:
+        served = [r for r in self.results if r.ok]
+        tokens = sum(r.length for r in served)
+        out = {
+            "requests": len(self.results),
+            "served": len(served),
+            "rejected": len(self.results) - len(served),
+            "tokens": tokens,
+            "wall_s": self.wall_s,
+            "requests_per_s": len(served) / self.wall_s if self.wall_s else 0.0,
+            "tokens_per_s": tokens / self.wall_s if self.wall_s else 0.0,
+            "compiles": sum(b.compiles for b in self._buckets.values()),
+            "max_est_act_mb": max(
+                (r.est_activation_bytes for r in served), default=0) / 1e6,
+            "buckets": [self._buckets[b].as_dict()
+                        for b in sorted(self._buckets)],
+        }
+        return out
+
+    # -- reports ----------------------------------------------------------
+    def write_csv(self, fh: IO[str]) -> None:
+        fh.write(CSV_HEADER + "\n")
+        for r in self.results:
+            fh.write(csv_row(r) + "\n")
+
+    def write_json(self, fh: IO[str]) -> None:
+        json.dump({"summary": self.summary(),
+                   "requests": [self._req_dict(r) for r in self.results]},
+                  fh, indent=2)
+
+    @staticmethod
+    def _req_dict(r: FoldResult) -> dict:
+        return {
+            "request_id": r.request_id, "length": r.length,
+            "bucket": r.bucket, "batch_size": r.batch_size,
+            "status": r.status, "reason": r.reason,
+            "queue_wait_ms": r.queue_wait_ms, "compile_ms": r.compile_ms,
+            "run_ms": r.run_ms, "tm_vs_fp": r.tm_vs_fp,
+            "padding_frac": r.padding_frac,
+            "est_activation_bytes": r.est_activation_bytes,
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            if path.endswith(".json"):
+                self.write_json(fh)
+            else:
+                self.write_csv(fh)

@@ -1,0 +1,144 @@
+"""Token-budget continuous batching over length buckets (ESMFold-style).
+
+Requests queue per length bucket.  ``next_batch`` drains the bucket holding
+the oldest waiting request (FCFS across buckets, arrival order within one)
+and grows the batch while every constraint holds:
+
+  * padded tokens ``(n+1) * bucket <= max_tokens_per_batch``
+  * ``n + 1 <= max_batch``
+  * buckets at/above the token-wise-MHA threshold run solo (the chunked
+    attention path's bias addressing assumes one protein per flattened
+    row-batch, and the cubic memory story is per-protein anyway)
+  * the admission controller prices the grown batch under the memory
+    budget; a growth that would bust the budget stops the batch (the rest
+    of the queue is *deferred* to the next batch), and a request whose
+    bucket busts the budget even at batch 1 is *rejected*.
+
+Continuous batching: ``submit`` may be called at any time, including
+between ``next_batch`` calls — newly arrived requests join the next batch
+of their bucket rather than waiting for a "wave" to finish.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from repro.serving.admission import ADMIT, REJECT, AdmissionController
+from repro.serving.types import FoldRequest
+
+
+def pow2_buckets(min_len: int, max_len: int, floor: int = 16) -> tuple[int, ...]:
+    """Power-of-two bucket edges covering [min_len, max_len]."""
+    edges = []
+    b = floor
+    while b < max(min_len, floor):
+        b *= 2
+    while True:
+        edges.append(b)
+        if b >= max_len:
+            break
+        b *= 2
+    return tuple(edges)
+
+
+def parse_buckets(spec: str, min_len: int, max_len: int) -> tuple[int, ...]:
+    """--buckets CLI spec: 'pow2' or comma-separated edges ('32,64,96')."""
+    if spec == "pow2":
+        return pow2_buckets(min_len, max_len)
+    edges = tuple(sorted(int(tok) for tok in spec.split(",") if tok.strip()))
+    if not edges:
+        raise ValueError(f"empty bucket spec {spec!r}")
+    return edges
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledBatch:
+    bucket: int
+    requests: tuple[FoldRequest, ...]
+    est_bytes: int
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.requests)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    request: FoldRequest
+    reason: str
+
+
+class TokenBudgetScheduler:
+    def __init__(self, buckets: tuple[int, ...], *,
+                 max_tokens_per_batch: int = 1024, max_batch: int = 8,
+                 admission: AdmissionController | None = None,
+                 solo_len: int = 256):
+        if not buckets:
+            raise ValueError("need at least one bucket edge")
+        self.buckets = tuple(sorted(buckets))
+        self.max_tokens_per_batch = max_tokens_per_batch
+        self.max_batch = max_batch
+        self.admission = admission
+        self.solo_len = solo_len
+        self._queues: dict[int, deque[FoldRequest]] = {
+            b: deque() for b in self.buckets}
+
+    # -- intake -----------------------------------------------------------
+    def bucket_for(self, length: int) -> int | None:
+        """Smallest bucket edge holding ``length`` (None = too long)."""
+        for edge in self.buckets:
+            if length <= edge:
+                return edge
+        return None
+
+    def submit(self, req: FoldRequest, now: float) -> Rejection | None:
+        """Queue a request; returns a Rejection if it can never be served."""
+        req.arrival_time = now
+        bucket = self.bucket_for(req.length)
+        if bucket is None:
+            return Rejection(req, f"length {req.length} exceeds max bucket "
+                                  f"{self.buckets[-1]}")
+        if self.admission is not None:
+            d = self.admission.admit(bucket, 1)
+            if d.verdict == REJECT:
+                return Rejection(req, d.reason)
+        self._queues[bucket].append(req)
+        return None
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- batch formation --------------------------------------------------
+    def _oldest_bucket(self) -> int | None:
+        best, best_t = None, None
+        for bucket, q in self._queues.items():
+            if q and (best_t is None or q[0].arrival_time < best_t):
+                best, best_t = bucket, q[0].arrival_time
+        return best
+
+    def _may_grow(self, bucket: int, n: int) -> bool:
+        """Can the batch grow from n to n+1 requests?"""
+        if n >= self.max_batch:
+            return False
+        if n >= 1 and bucket >= self.solo_len:
+            return False
+        if (n + 1) * bucket > self.max_tokens_per_batch and n >= 1:
+            return False          # always admit at least one (ESMFold rule)
+        if self.admission is not None:
+            if self.admission.admit(bucket, n + 1).verdict != ADMIT:
+                return n < 1      # solo request over budget was vetted at
+                                  # submit; growth over budget just stops
+        return True
+
+    def next_batch(self) -> ScheduledBatch | None:
+        bucket = self._oldest_bucket()
+        if bucket is None:
+            return None
+        q = self._queues[bucket]
+        picked: list[FoldRequest] = []
+        while q and self._may_grow(bucket, len(picked)):
+            picked.append(q.popleft())
+        est = (self.admission.estimate_bytes(bucket, len(picked))
+               if self.admission is not None else 0)
+        return ScheduledBatch(bucket, tuple(picked), est)

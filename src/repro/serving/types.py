@@ -1,0 +1,96 @@
+"""Request/response types for the fold-serving engine.
+
+A ``FoldRequest`` is an amino-acid sequence; a ``FoldResult`` carries the
+masked-length-stripped outputs (coords/distogram only over real tokens) plus
+the per-request serving telemetry the metrics module aggregates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+REJECTED = "rejected"
+OK = "ok"
+
+
+@dataclasses.dataclass
+class FoldRequest:
+    request_id: int
+    aatype: np.ndarray                 # (L,) int32 amino-acid ids
+    arrival_time: float = 0.0          # engine clock, set on submit
+
+    def __post_init__(self):
+        self.aatype = np.asarray(self.aatype, np.int32)
+        if self.aatype.ndim != 1:
+            raise ValueError(f"aatype must be 1-D, got {self.aatype.shape}")
+
+    @property
+    def length(self) -> int:
+        return int(self.aatype.shape[0])
+
+
+@dataclasses.dataclass
+class FoldResult:
+    request_id: int
+    length: int
+    status: str = OK                   # OK | REJECTED
+    reason: str = ""
+    bucket: int = 0
+    batch_size: int = 0
+    coords: np.ndarray | None = None           # (L, 3) — padding stripped
+    distogram: np.ndarray | None = None        # (L, L, bins) — stripped
+    tm_vs_fp: float | None = None              # fidelity vs FP16 reference
+    queue_wait_ms: float = 0.0
+    compile_ms: float = 0.0            # 0 on executable-cache hits
+    run_ms: float = 0.0
+    est_activation_bytes: int = 0      # admission-control price of its batch
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+    @property
+    def padding_frac(self) -> float:
+        """Fraction of the bucket row this request wasted as padding."""
+        if not self.bucket:
+            return 0.0
+        return 1.0 - self.length / self.bucket
+
+
+def pad_to_bucket(seqs: list[np.ndarray], bucket: int,
+                  batch: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Right-pad sequences into an (B, bucket) aatype batch + bool mask.
+
+    ``batch`` > len(seqs) appends fully-masked dummy rows (batch-size
+    rounding keeps the executable-cache key space small); dummy rows are
+    finite-garbage-safe because masking never lets them touch real rows.
+    """
+    b = batch or len(seqs)
+    if b < len(seqs):
+        raise ValueError(f"batch {b} < {len(seqs)} sequences")
+    aatype = np.zeros((b, bucket), np.int32)
+    mask = np.zeros((b, bucket), bool)
+    for i, s in enumerate(seqs):
+        ln = len(s)
+        if ln > bucket:
+            raise ValueError(f"sequence len {ln} exceeds bucket {bucket}")
+        aatype[i, :ln] = s
+        mask[i, :ln] = True
+    return aatype, mask
+
+
+def strip_padding(out: dict[str, Any], row: int, length: int) -> dict[str, Any]:
+    """Extract one request's real-token outputs from a padded batch output.
+
+    ``out`` arrays must already be host numpy (convert the whole batch once
+    with ``np.asarray``): slicing device arrays eagerly would compile one
+    tiny XLA program per distinct length and pollute the zero-recompile
+    steady-state guarantee.
+    """
+    return {
+        "coords": np.array(out["coords"][row, :length]),
+        "distogram": (np.array(out["distogram"][row, :length, :length])
+                      if "distogram" in out else None),
+    }

@@ -1,0 +1,104 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The real package (listed in requirements-dev.txt) is preferred — conftest.py
+installs this module into ``sys.modules`` only when the import fails, so the
+suite still collects and the property tests still run, just with a fixed
+deterministic sample stream instead of adaptive shrinking search.
+
+Only the API surface this repo's tests use is implemented:
+``given``, ``settings.register_profile/load_profile``, and the strategies
+``integers``, ``floats``, ``sampled_from``, ``composite``.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def composite(fn):
+    def builder(*args, **kwargs):
+        def draw_fn(rng):
+            return fn(lambda s: s.draw(rng), *args, **kwargs)
+        return _Strategy(draw_fn)
+    return builder
+
+
+class settings:
+    _profiles: dict[str, dict] = {"default": {"max_examples": 10}}
+    _current = "default"
+
+    def __init__(self, **kwargs):
+        self._kwargs = kwargs
+
+    def __call__(self, fn):                      # used as @settings(...) deco
+        fn._shim_settings = self._kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = name
+
+    @classmethod
+    def _max_examples(cls, fn=None) -> int:
+        over = getattr(fn, "_shim_settings", {}) if fn is not None else {}
+        prof = cls._profiles.get(cls._current, {})
+        return over.get("max_examples", prof.get("max_examples", 10)) or 10
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            for i in range(settings._max_examples(fn)):
+                rng = random.Random(0xA5EED + 7919 * i)
+                vals = [s.draw(rng) for s in strategies]
+                kvals = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *vals, **kwargs, **kvals)
+        # plain attribute copy, NOT functools.wraps: wraps would forward the
+        # wrapped signature and make pytest treat strategy args as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    import sys
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    st.composite = composite
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

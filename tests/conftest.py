@@ -5,6 +5,14 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  — real package wins when installed
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
 
 import jax
 

@@ -64,7 +64,11 @@ MESH = make_mesh((1, 1), ("data", "model"))
 
 def _mesh16():
     # abstract 16x16 rule evaluation without devices: use an AbstractMesh
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    # (signature changed across JAX versions: (shape, names) vs pair-tuples)
+    try:
+        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        return jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_param_spec_col_row_rules():
