@@ -43,6 +43,15 @@ def main():
     us_m = time_fn(lambda a: mha_ref(a, a, a, causal=True), q)
     emit("kernel/flash_attn_interp", us_f, f"ref_jnp={us_m:.0f}us")
 
+    # same call routed through the dispatch layer, both backends
+    from repro.kernels import dispatch
+    us_dp = time_fn(
+        lambda a: dispatch.attention(a, a, a, causal=True, backend="pallas"), q)
+    us_dr = time_fn(
+        lambda a: dispatch.attention(a, a, a, causal=True, backend="ref"), q)
+    emit("kernel/dispatch_attn", us_dp,
+         f"ref={us_dr:.0f}us backend={dispatch.describe('pallas')}")
+
 
 if __name__ == "__main__":
     main()

@@ -3,7 +3,12 @@ same mixed-length request trace (requests/s and tokens/s), plus the
 admission-control bound check — every batch the engine ran must have been
 priced under the peak-activation budget.
 
+``--kernels {pallas,ref,auto}`` selects the kernel backend for BOTH paths
+(the sequential jit traces under it, the engine lowers its bucketed
+executables under it) — the bench never silently falls back to the refs.
+
     PYTHONPATH=src python -m benchmarks.serving [--n 16] [--mem-budget-mb 96]
+    PYTHONPATH=src python -m benchmarks.serving --kernels pallas
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ from benchmarks.common import emit
 from repro.configs import reduce_ppm_config
 from repro.core import make_scheme
 from repro.data.pipeline import ProteinSampler
+from repro.kernels import dispatch
 from repro.models.ppm import init_ppm, ppm_forward
 from repro.serving import FoldEngine, pad_to_bucket, parse_buckets
 
@@ -57,8 +63,12 @@ def main(argv=None) -> None:
     ap.add_argument("--max-tokens-per-batch", type=int, default=512)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--mem-budget-mb", type=float, default=None)
+    ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
+                    default=dispatch.AUTO)
     args = ap.parse_args(argv)
 
+    dispatch.set_backend(args.kernels)
+    backend = dispatch.describe(args.kernels)
     cfg = reduce_ppm_config()
     params = init_ppm(jax.random.PRNGKey(0), cfg)
     buckets = parse_buckets(args.buckets, args.min_len, args.max_len)
@@ -76,21 +86,23 @@ def main(argv=None) -> None:
     seq_cold = bench_sequential(seq_fwd, params, seqs, buckets)
     seq_warm = bench_sequential(seq_fwd, params, seqs, buckets)
     emit("serving.sequential.cold", seq_cold * 1e6,
-         f"{len(seqs) / seq_cold:.2f}req/s {tokens / seq_cold:.1f}tok/s")
+         f"{len(seqs) / seq_cold:.2f}req/s {tokens / seq_cold:.1f}tok/s "
+         f"kernels={backend}")
     emit("serving.sequential.warm", seq_warm * 1e6,
          f"{len(seqs) / seq_warm:.2f}req/s {tokens / seq_warm:.1f}tok/s")
 
     engine = FoldEngine(params, cfg, args.scheme, buckets=buckets,
                         max_tokens_per_batch=args.max_tokens_per_batch,
                         max_batch=args.max_batch,
-                        mem_budget_mb=args.mem_budget_mb, fidelity=False)
+                        mem_budget_mb=args.mem_budget_mb, fidelity=False,
+                        kernels=args.kernels)
     eng_cold, _ = bench_engine(engine, seqs)
     compiles_after_cold = engine.compile_count
     eng_warm, results = bench_engine(engine, seqs)
     assert engine.compile_count == compiles_after_cold, "steady state recompiled"
     emit("serving.engine.cold", eng_cold * 1e6,
          f"{len(seqs) / eng_cold:.2f}req/s {tokens / eng_cold:.1f}tok/s "
-         f"compiles={compiles_after_cold}")
+         f"compiles={compiles_after_cold} kernels={backend}")
     emit("serving.engine.warm", eng_warm * 1e6,
          f"{len(seqs) / eng_warm:.2f}req/s {tokens / eng_warm:.1f}tok/s "
          f"speedup_vs_seq={seq_warm / eng_warm:.2f}x")

@@ -22,7 +22,6 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.qmatmul import qmatmul_fused_ref
 from repro.core.policy import AAQConfig, NO_QUANT
 from repro.core.qtensor import qmax
 
@@ -93,7 +92,13 @@ class AAQScheme(QuantScheme):
     def linear(self, x, w, b=None, site=""):
         pol = self.cfg.policy_for(site)
         if pol.enabled and self.use_qmatmul:
-            y = qmatmul_fused_ref(x, w, pol.bits, pol.k_outliers)
+            # routed: Pallas aaq_quant+aaq_matmul kernels or the XLA
+            # integer-path ref, per the active kernel backend.  Lazy import:
+            # repro.core must stay importable without pulling the kernel
+            # package in at module-load time.
+            from repro.kernels import dispatch
+            y = dispatch.quantized_linear(x, w, bits=pol.bits,
+                                          k_outliers=pol.k_outliers)
         else:
             y = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
         return y if b is None else y + b

@@ -6,7 +6,12 @@ ops.py jit wrapper + ref.py pure-jnp oracle, validated in interpret mode):
                   scale + rank-k outlier correction (RMPU analogue)
   flash_attention token-wise MHA with pair bias / causal / SWA / GQA /
                   kv_valid_len (the paper's §5.4 dataflow, generalized)
+
+``dispatch`` is the routing layer every model call site goes through: it
+selects Pallas vs ref per call from the ``--kernels {pallas,ref,auto}``
+mode, backend capability, and shape heuristics (interpret mode off-TPU).
 """
 from repro.kernels.aaq_matmul import aaq_linear, qtensor_matmul
 from repro.kernels.aaq_quant import aaq_quantize
 from repro.kernels.flash_attention import mha
+from repro.kernels import dispatch

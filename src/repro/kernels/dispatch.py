@@ -1,0 +1,201 @@
+"""Kernel dispatch: one routing point between the Pallas kernels and the
+XLA reference implementations.
+
+Every attention and quantized-matmul call site in the model zoo (PPM trunk
+row/column attention, chunked triangular attention, the structure module,
+the LM/encdec/MoE families, and ``AAQScheme.linear``) goes through
+``attention`` / ``quantized_linear`` here instead of importing a concrete
+implementation.  Backend selection, per call:
+
+  1. an explicit ``backend=`` argument (tests, microbenches),
+  2. the process-wide mode set by ``set_backend`` — this is what the
+     ``--kernels {pallas,ref,auto}`` launcher flag drives,
+  3. in ``auto`` mode, backend capability plus shape heuristics: Pallas
+     only on a real TPU, and only for shapes big enough that the fused
+     kernel beats XLA's fusion (tiny decode/test shapes stay on the ref).
+
+An explicit ``pallas`` request off-TPU runs the kernels in interpret mode
+(``pl.pallas_call(interpret=True)``), so CPU CI executes the real kernel
+bodies — same grid, same block program — without TPU hardware.
+
+Counters: each routed call bumps ``counters[...]`` at *trace* time.  Inside
+``jit``/``scan`` that is once per compilation (or once per scanned body
+trace), not once per executed step; the parity suite uses the counters to
+prove which kernel path a compiled forward actually contains.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+
+from repro.core.qmatmul import qmatmul_fused_ref
+from repro.kernels.aaq_matmul.ops import aaq_linear
+from repro.kernels.flash_attention.flash_attention import flash_mha_pallas
+from repro.kernels.flash_attention.ref import mha_chunked
+
+REF = "ref"
+PALLAS = "pallas"
+AUTO = "auto"
+BACKENDS = (REF, PALLAS, AUTO)
+
+# auto-mode shape floors: below these the kernel-launch bookkeeping beats
+# any fusion win, so auto stays on the XLA ref even on TPU
+MIN_FLASH_SEQ = 128          # min(Sq, Skv) for the flash path
+MIN_QMM_TOKENS = 64          # flattened token count for the AAQ matmul
+
+# interpret-mode block override: the interpreter executes the grid serially
+# with a large fixed per-step overhead, so correctness-path runs want the
+# fewest, fattest blocks (VMEM limits don't apply off-chip); compiled TPU
+# runs keep the MXU-aligned 128/256 defaults
+INTERP_BLOCK_SEQ = 1024      # flash block_q/block_k cap
+INTERP_BLOCK_T = 4096        # aaq quant/matmul token-block cap
+INTERP_BLOCK_D = 1024        # aaq matmul output-block cap
+
+_MODE = AUTO
+
+counters: dict[str, int] = {
+    "attention.pallas": 0,
+    "attention.ref": 0,
+    "qmatmul.pallas": 0,
+    "qmatmul.ref": 0,
+}
+
+
+def reset_counters() -> None:
+    for k in counters:
+        counters[k] = 0
+
+
+def _check(mode: str) -> str:
+    if mode not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {mode!r}; pick one of {BACKENDS}")
+    return mode
+
+
+def set_backend(mode: str) -> None:
+    """Set the process-wide backend mode (the ``--kernels`` flag)."""
+    global _MODE
+    _MODE = _check(mode)
+
+
+def get_backend() -> str:
+    return _MODE
+
+
+@contextlib.contextmanager
+def use_backend(mode: str):
+    """Scoped ``set_backend`` — traces (incl. ``jit.lower``) inside the
+    ``with`` block route through ``mode``."""
+    global _MODE
+    prev = _MODE
+    _MODE = _check(mode)
+    try:
+        yield
+    finally:
+        _MODE = prev
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels must run interpreted off-TPU (CPU CI, dry runs)."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(backend: str | None, auto_wants_pallas: bool) -> str:
+    mode = _check(backend) if backend is not None else _MODE
+    if mode != AUTO:
+        return mode
+    if jax.default_backend() != "tpu":
+        return REF
+    return PALLAS if auto_wants_pallas else REF
+
+
+def resolve_attention(sq: int, skv: int, *, backend: str | None = None) -> str:
+    return _resolve(backend, min(sq, skv) >= MIN_FLASH_SEQ)
+
+
+def resolve_matmul(n_tokens: int, *, backend: str | None = None) -> str:
+    return _resolve(backend, n_tokens >= MIN_QMM_TOKENS)
+
+
+def attention_is_pallas(sq: int, skv: int, *, backend: str | None = None) -> bool:
+    """Will ``attention`` take the Pallas path for this shape?  Call sites
+    with a kernel-friendly rewrite (tri-attn's row flattening) use this to
+    pick the dataflow before building operands."""
+    return resolve_attention(sq, skv, backend=backend) == PALLAS
+
+
+def describe(backend: str | None = None, *, seq: int | None = None) -> str:
+    """Stable human/report label for the backend a mode resolves to.
+
+    For ``auto`` the label is capability-only unless ``seq`` is given — a
+    representative attention length (e.g. the serving bucket) — in which
+    case the shape floors are folded in, so an on-TPU bucket below
+    MIN_FLASH_SEQ is honestly reported as ``auto:ref``.
+    """
+    mode = _check(backend) if backend is not None else _MODE
+    interp = interpret_mode()
+    if mode == AUTO:
+        inner = (_resolve(AUTO, True) if seq is None
+                 else resolve_attention(seq, seq, backend=AUTO))
+        if inner == PALLAS and interp:
+            inner = "pallas-interpret"
+        return f"auto:{inner}"
+    if mode == PALLAS and interp:
+        return "pallas-interpret"
+    return mode
+
+
+# --------------------------------------------------------------------------
+# routed ops
+# --------------------------------------------------------------------------
+def attention(q, k, v, *, bias=None, causal=False, window=None,
+              kv_valid_len=None, softmax_scale=None, q_chunk=512,
+              block_q=128, block_k=128, backend=None):
+    """Token-wise MHA: q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D); bias (Bb,Hq,Sq,Skv)
+    with block batch-broadcast (bias row t covers B//Bb consecutive q rows).
+
+    Pallas path: the fused flash kernel (interpret mode off-TPU).  Ref
+    path: ``mha_chunked`` — bitwise the pre-dispatch model numerics.
+    """
+    be = resolve_attention(q.shape[1], k.shape[1], backend=backend)
+    if be == PALLAS:
+        counters["attention.pallas"] += 1
+        interp = interpret_mode()
+        if interp:
+            block_q = max(block_q, min(q.shape[1], INTERP_BLOCK_SEQ))
+            block_k = max(block_k, min(k.shape[1], INTERP_BLOCK_SEQ))
+        return flash_mha_pallas(q, k, v, bias, kv_valid_len, causal=causal,
+                                window=window, softmax_scale=softmax_scale,
+                                block_q=block_q, block_k=block_k,
+                                interpret=interp)
+    counters["attention.ref"] += 1
+    return mha_chunked(q, k, v, bias=bias, causal=causal, window=window,
+                       kv_valid_len=kv_valid_len, softmax_scale=softmax_scale,
+                       q_chunk=q_chunk)
+
+
+def quantized_linear(x, w, *, bits: int, k_outliers: int, bias=None,
+                     backend=None):
+    """AAQ linear  y = dequant-free-matmul(quantize(x), w) (+ bias).
+
+    Pallas path: the packed aaq_quant + aaq_matmul kernels — the bucketed
+    executables compute on INT4/INT8 inliers with the deferred per-token
+    scale, never materializing a dequantized activation.  Ref path:
+    ``qmatmul_fused_ref`` (same integer-path math, XLA-fused).
+    """
+    n_tokens = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    be = resolve_matmul(n_tokens, backend=backend)
+    if be == PALLAS:
+        counters["qmatmul.pallas"] += 1
+        interp = interpret_mode()
+        block_t = min(max(n_tokens, 1), INTERP_BLOCK_T) if interp else 256
+        block_d = min(w.shape[-1], INTERP_BLOCK_D) if interp else 256
+        y = aaq_linear(x, w, bits=bits, k_outliers=k_outliers,
+                       use_kernel=True, interpret=interp,
+                       block_t=block_t, block_d=block_d)
+    else:
+        counters["qmatmul.ref"] += 1
+        y = qmatmul_fused_ref(x, w, bits, k_outliers)
+    return y if bias is None else y + bias

@@ -7,12 +7,35 @@ import jax.numpy as jnp
 NEG = -1e30
 
 
+def _block_broadcast_bias(bias, b):
+    """(Bb, ...) bias -> (b, ...): entry t covers rows [t*rep, (t+1)*rep).
+
+    Block (not modulo-tile) semantics: this matches the Pallas kernel's
+    ``b // bgroup`` index map and the flattened-row batching of chunked
+    triangular attention, where all N rows of one protein are contiguous.
+    The broadcast_to is fusable under jit; the repeat is never materialized
+    standalone.
+    """
+    rep = b // bias.shape[0]
+    if rep <= 1:
+        return bias
+    return jnp.broadcast_to(bias[:, None], (bias.shape[0], rep,
+                                            *bias.shape[1:])).reshape(
+        b, *bias.shape[1:])
+
+
 def mha_ref(q, k, v, *, bias=None, causal=False, window=None,
             kv_valid_len=None, softmax_scale=None):
     """Masked multi-head attention, materializing the score tensor.
 
     q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D) with Hq % Hkv == 0 (GQA);
     bias (Bb,Hq,Sq,Skv) with B % Bb == 0; kv_valid_len (B,) int32.
+
+    Bias batch broadcasting is *block*-wise: bias row ``t`` covers the
+    B // Bb consecutive q-batch rows ``[t * B//Bb, (t+1) * B//Bb)`` — the
+    same addressing as the Pallas kernel's ``b // bgroup`` index map, and
+    what triangular attention's protein-major row flattening (rows
+    ``b*N..b*N+N-1`` all belong to protein ``b``) requires.
     """
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
@@ -23,10 +46,7 @@ def mha_ref(q, k, v, *, bias=None, causal=False, window=None,
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    kx.astype(jnp.float32)) * scale
     if bias is not None:
-        rep = b // bias.shape[0]
-        if rep > 1:   # broadcast (fusable), never materialize the repeat
-            bias = jnp.broadcast_to(bias[None], (rep, *bias.shape)).reshape(
-                b, *bias.shape[1:])
+        bias = _block_broadcast_bias(bias, b)
         s = s + bias.astype(jnp.float32)
     qpos = jnp.arange(sq)[:, None]
     kpos = jnp.arange(skv)[None, :]
@@ -73,11 +93,7 @@ def mha_chunked(q, k, v, *, bias=None, causal=False, window=None,
         s = jnp.einsum("bqhd,bkhd->bhqk", qq.astype(jnp.float32),
                        kx.astype(jnp.float32)) * scale
         if bb is not None:
-            rep = b // bb.shape[0]
-            if rep > 1:
-                bb = jnp.broadcast_to(bb[None], (rep, *bb.shape)).reshape(
-                    b, *bb.shape[1:])
-            s = s + bb.astype(jnp.float32)
+            s = s + _block_broadcast_bias(bb, b).astype(jnp.float32)
         qpos = ci * q_chunk + jnp.arange(q_chunk)[:, None]
         ok = jnp.ones((q_chunk, skv), bool)
         if causal:

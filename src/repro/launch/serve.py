@@ -10,9 +10,15 @@ Two services:
   * ``--mode lm``   — batched token serving for any zoo arch: prefill once,
     then steady-state decode with the ring KV cache (AAQ-on-KV optional).
 
+``--kernels {pallas,ref,auto}`` selects the kernel backend for BOTH paths
+(engine executables and the --no-engine fallback are lowered through
+``repro.kernels.dispatch``); ``pallas`` off-TPU runs the kernels in
+interpret mode.  ``--report`` rows record the backend each batch ran under.
+
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8 \
         --max-tokens-per-batch 256 --mem-budget-mb 64 --buckets 32,64
+    PYTHONPATH=src python -m repro.launch.serve --mode ppm --kernels pallas
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
 """
 from __future__ import annotations
@@ -27,6 +33,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config, reduce_ppm_config
 from repro.core import make_scheme
 from repro.core.policy import AAQConfig, DISABLED
+from repro.kernels import dispatch
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
@@ -44,17 +51,20 @@ def _serve_ppm_sequential(args, cfg, params, seqs, buckets) -> int:
     """Fallback path: one request at a time, but properly bucketed+jitted —
     the jitted forward is actually *called* (the old demo loop built ``fwd``
     and then bypassed it, re-tracing every request) and requests are padded
-    to bucket edges so XLA compiles once per bucket, not once per length."""
+    to bucket edges so XLA compiles once per bucket, not once per length.
+    Honors ``--kernels``: both jitted forwards trace under the selected
+    dispatch backend (set process-wide in ``main``)."""
     scheme = make_scheme(args.scheme)
+    backend = dispatch.describe(args.kernels)
     fwd = jax.jit(lambda p, a, m: ppm_forward(p, a, cfg, scheme, mask=m))
     fwd_fp = None
     if not args.no_fidelity:
         fwd_fp = jax.jit(lambda p, a, m: ppm_forward(p, a, cfg, mask=m))
-    print("request,len,bucket,latency_ms,tm_vs_fp")
+    print("request,len,bucket,latency_ms,tm_vs_fp,kernel_backend")
     for i, seq in enumerate(seqs):
         bucket = next((b for b in buckets if len(seq) <= b), None)
         if bucket is None:
-            print(f"{i},{len(seq)},,rejected:too-long,")
+            print(f"{i},{len(seq)},,rejected:too-long,,")
             continue
         aat, mask = pad_to_bucket([seq], bucket)
         aat, mask = jnp.asarray(aat), jnp.asarray(mask)
@@ -66,7 +76,7 @@ def _serve_ppm_sequential(args, cfg, params, seqs, buckets) -> int:
         if fwd_fp is not None:
             out_fp = fwd_fp(params, aat, mask)
             tm = f"{float(tm_score(out['coords'][0, :len(seq)], out_fp['coords'][0, :len(seq)])):.4f}"
-        print(f"{i},{len(seq)},{bucket},{ms:.1f},{tm}")
+        print(f"{i},{len(seq)},{bucket},{ms:.1f},{tm},{backend}")
     return 0
 
 
@@ -87,7 +97,7 @@ def serve_ppm(args):
         params, cfg, args.scheme, buckets=buckets,
         max_tokens_per_batch=args.max_tokens_per_batch,
         max_batch=args.max_batch, mem_budget_mb=args.mem_budget_mb,
-        fidelity=not args.no_fidelity)
+        fidelity=not args.no_fidelity, kernels=args.kernels)
     if args.warmup:
         engine.warmup()
     results = engine.run(seqs)
@@ -97,6 +107,7 @@ def serve_ppm(args):
     s = engine.metrics.summary()
     print(f"# served={s['served']}/{s['requests']} compiles={s['compiles']} "
           f"req/s={s['requests_per_s']:.2f} tok/s={s['tokens_per_s']:.1f} "
+          f"kernels={dispatch.describe(args.kernels)} "
           f"max_est_act_mb={s['max_est_act_mb']:.1f}"
           + (f" budget_mb={args.mem_budget_mb:.1f}"
              if args.mem_budget_mb else ""))
@@ -142,6 +153,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["ppm", "lm"], default="ppm")
     ap.add_argument("--scheme", default="lightnobel_aaq")
+    ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
+                    default=dispatch.AUTO,
+                    help="kernel backend: Pallas flash/AAQ kernels, XLA "
+                         "refs, or auto (capability + shape heuristics); "
+                         "'pallas' off-TPU runs in interpret mode")
     ap.add_argument("--n", type=int, default=4)
     ap.add_argument("--min-len", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=64)
@@ -165,6 +181,7 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--quant-kv", action="store_true")
     args = ap.parse_args(argv)
+    dispatch.set_backend(args.kernels)   # both modes, both ppm paths
     return serve_ppm(args) if args.mode == "ppm" else serve_lm(args)
 
 

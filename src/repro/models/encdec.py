@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.policy import AAQConfig, DISABLED
-from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.kernels import dispatch
 from repro.models import common as cm
 from repro.models import transformer as tf
 
@@ -73,7 +73,7 @@ def _self_attn(p, x, cfg, causal, cache=None, positions=None,
     k = aaq.act(k, "lm.kv_cache")
     v = aaq.act(v, "lm.kv_cache")
     if cache is None:
-        o = mha_chunked(q, k, v, causal=causal)
+        o = dispatch.attention(q, k, v, causal=causal)
         nc = None
     else:
         w = cache["k"].shape[1]
@@ -84,8 +84,8 @@ def _self_attn(p, x, cfg, causal, cache=None, positions=None,
         cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
                                           (0, slot, 0, 0))
         kvlen = jnp.full((b,), jnp.minimum(pos + 1, w), jnp.int32)
-        o = mha_ref(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                    kv_valid_len=kvlen, causal=False)
+        o = dispatch.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                               kv_valid_len=kvlen, causal=False)
         nc = {"k": ck, "v": cv}
     return cm.dense(p["o"], o.reshape(b, s, hq * hd)), nc
 
@@ -97,7 +97,7 @@ def _cross_attn(p, x, enc_out, cfg):
     q = cm.dense(p["q"], x).reshape(b, s, hq, hd)
     k = cm.dense(p["k"], enc_out).reshape(b, se, hkv, hd)
     v = cm.dense(p["v"], enc_out).reshape(b, se, hkv, hd)
-    o = mha_chunked(q, k, v, causal=False)
+    o = dispatch.attention(q, k, v, causal=False)
     return cm.dense(p["o"], o.reshape(b, s, hq * hd))
 
 

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
 from repro.core.policy import AAQConfig, DISABLED
-from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.kernels import dispatch
 from repro.models import common as cm
 from repro.models import transformer as tf
 
@@ -202,8 +202,8 @@ def mla_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
 
     if cache is None:
         k, v = _mla_qkv_from_latent(p, latent, k_rope, q, cfg)
-        o = mha_chunked(q, k, v, causal=True,
-                        softmax_scale=1.0 / math.sqrt(dn + dr))
+        o = dispatch.attention(q, k, v, causal=True,
+                               softmax_scale=1.0 / math.sqrt(dn + dr))
         new_cache = None
     else:
         w = cache["latent"].shape[1]
@@ -216,8 +216,8 @@ def mla_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
         k, v = _mla_qkv_from_latent(p, cl.astype(x.dtype), cr.astype(x.dtype),
                                     q, cfg)
         kvlen = jnp.full((b,), jnp.minimum(pos + 1, w), jnp.int32)
-        o = mha_ref(q, k, v, kv_valid_len=kvlen, causal=False,
-                    softmax_scale=1.0 / math.sqrt(dn + dr))
+        o = dispatch.attention(q, k, v, kv_valid_len=kvlen, causal=False,
+                               softmax_scale=1.0 / math.sqrt(dn + dr))
         new_cache = {"latent": cl, "k_rope": cr}
     o = o.reshape(b, s, h * m.v_head_dim)
     return cm.dense(p["o"], o), new_cache

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models import common as cm
 
 
@@ -64,15 +65,14 @@ def structure_apply(p, s, z, n_iter: int = 4, mask=None):
         if mask is not None:
             v = v * mask[:, :, None, None].astype(v.dtype)
         d2 = jnp.sum((t[:, :, None] - t[:, None, :]) ** 2, axis=-1)  # (B,N,N)
-        logits = (jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32),
-                             k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
-                  + bias
-                  - jax.nn.softplus(p["dist_w"].astype(jnp.float32))[None, :, None, None]
-                  * d2[:, None])
+        # pair bias + point-distance term + key padding fold into one
+        # additive bias; dispatch routes to the flash kernel or the ref
+        iter_bias = (bias
+                     - jax.nn.softplus(p["dist_w"].astype(jnp.float32))[None, :, None, None]
+                     * d2[:, None])
         if key_bias is not None:
-            logits = logits + key_bias[:, None, None, :]
-        probs = jax.nn.softmax(logits, axis=-1)
-        o = jnp.einsum("bhij,bjhd->bihd", probs, v.astype(jnp.float32))
+            iter_bias = iter_bias + key_bias[:, None, None, :]
+        o = dispatch.attention(q, k, v, bias=iter_bias)
         s = s + cm.dense(p["out"], o.reshape(b, n, hm).astype(s.dtype))
         tm = p["trans_mlp"]
         s = s + cm.dense(tm["down"], jax.nn.relu(cm.dense(tm["up"], cm.layernorm(tm["ln"], s))))

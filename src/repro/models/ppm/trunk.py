@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schemes import FP16Baseline, QuantScheme
+from repro.kernels import dispatch
 from repro.models import common as cm
 from repro.parallel.sharding import constrain as _constrain
 
@@ -124,9 +125,10 @@ def init_block(key, cfg: PPMConfig) -> cm.Params:
 # --------------------------------------------------------------------------
 
 # Sequence length at/above which triangular attention switches to the
-# chunked token-wise MHA path.  The serving engine's solo-bucket rule is
-# clamped to this: the chunked path's bias addressing assumes one protein
-# per flattened row-batch, so batches above this length must be size 1.
+# token-wise MHA path (flattened rows-as-batch; the cubic score tensor is
+# never materialized).  Works at any batch size: the bias batch broadcast
+# is block-wise (protein-major), matching the flattened row layout in both
+# the XLA ref and the Pallas flash kernel.
 CHUNKED_ATTN_LEN = 256
 
 
@@ -188,24 +190,23 @@ def tri_attn_apply(p, z, scheme: QuantScheme, starting: bool, sc: str,
         v = v * mask[:, None, :, None, None].astype(v.dtype)
     bias = cm.dense(p["bias"], zl, scheme, f"{sc}.post_ln")  # (B,N,N,H)
     # starting node: logits[b,h,i,j,k] = q_ij . k_ik + bias_jk
-    if n >= CHUNKED_ATTN_LEN:
+    if n >= CHUNKED_ATTN_LEN or dispatch.attention_is_pallas(n, n):
         # token-wise MHA (paper §5.4): rows are batch, the (N,N,N) score
-        # tensor never materializes — the Pallas flash kernel is the fused
-        # TPU form; this is the XLA-chunked equivalent for lowering.
-        # Padding is a contiguous suffix (serving buckets), so the key mask
-        # folds into kv_valid_len. Requires B == 1: mha's bias broadcast
-        # addresses flattened rows modulo the bias batch.
-        from repro.kernels.flash_attention.ref import mha_chunked
+        # tensor never materializes.  Dispatch routes the flattened call to
+        # the Pallas flash kernel or the XLA-chunked ref; both broadcast
+        # the (B,H,N,N) bias block-wise over the B*N protein-major rows,
+        # so any batch size works.  Padding is a contiguous suffix
+        # (serving buckets), so the key mask folds into kv_valid_len.
         kv_valid = None
         if mask is not None:
             lens = jnp.sum(mask.astype(jnp.int32), axis=-1)          # (B,)
             kv_valid = jnp.repeat(lens, n)                           # (B*n,)
-        o = mha_chunked(q.reshape(b_ * n, n, heads, dh),
-                        k.reshape(b_ * n, n, heads, dh),
-                        v.reshape(b_ * n, n, heads, dh),
-                        bias=jnp.transpose(bias, (0, 3, 1, 2)),
-                        kv_valid_len=kv_valid,
-                        causal=False, q_chunk=512)
+        o = dispatch.attention(q.reshape(b_ * n, n, heads, dh),
+                               k.reshape(b_ * n, n, heads, dh),
+                               v.reshape(b_ * n, n, heads, dh),
+                               bias=jnp.transpose(bias, (0, 3, 1, 2)),
+                               kv_valid_len=kv_valid,
+                               causal=False, q_chunk=512)
         o = o.reshape(b_, n, n, heads, dh).astype(z.dtype)
     else:
         logits = jnp.einsum("bijhd,bikhd->bhijk", q.astype(jnp.float32),
@@ -249,13 +250,12 @@ def seq_attn_apply(p, s, z, heads: int, mask=None):
     if mask is not None:
         v = v * mask[:, :, None, None].astype(v.dtype)
     bias = cm.dense(p["pair_bias"], cm.layernorm(p["pair_bias_ln"], z))
-    logits = (jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32),
-                         k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
-              + jnp.transpose(bias, (0, 3, 1, 2)).astype(jnp.float32))
+    bias = jnp.transpose(bias, (0, 3, 1, 2)).astype(jnp.float32)  # (B,H,N,N)
     if mask is not None:
-        logits = logits + cm.key_padding_bias(mask)[:, None, None, :]
-    probs = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bhij,bjhd->bihd", probs, v.astype(jnp.float32))
+        # additive key-padding fold keeps masking non-rescaling: real keys
+        # get literal +0.0, padded keys underflow to exact 0 post-softmax
+        bias = bias + cm.key_padding_bias(mask)[:, None, None, :]
+    o = dispatch.attention(q, k, v, bias=bias)
     o = o.reshape(b_, n, hm).astype(s.dtype)
     g = jax.nn.sigmoid(cm.dense(p["gate"], sl))
     return cm.dense(p["out"], g * o)

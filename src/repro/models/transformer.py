@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.policy import AAQConfig, DISABLED
-from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.kernels import dispatch
 from repro.models import common as cm
 from repro.parallel.sharding import constrain as _constrain
 
@@ -121,7 +121,8 @@ def attn_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
     v = aaq.act(v, "lm.kv_cache")
     window = window if window is not None else cfg.window
     if cache is None:
-        o = mha_chunked(q, k, v, bias=bias, causal=causal, window=window)
+        o = dispatch.attention(q, k, v, bias=bias, causal=causal,
+                               window=window)
         new_cache = None
     else:
         # decode: write s(=1) new rows at ring position, attend over buffer
@@ -159,7 +160,7 @@ def attn_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
             new_cache.update({"k_scale": cks, "v_scale": cvs})
         else:
             kd, vd = ck.astype(q.dtype), cv.astype(q.dtype)
-        o = mha_ref(q, kd, vd, kv_valid_len=kvlen, causal=False)
+        o = dispatch.attention(q, kd, vd, kv_valid_len=kvlen, causal=False)
     o = o.reshape(b, s, hq * hd)
     return cm.dense(p["o"], o), new_cache
 

@@ -63,6 +63,11 @@ class AdmissionController:
         return sum(self.scheme.act_bytes(site, shape) for site, shape in inv)
 
     def _score_bytes(self, ns: int, batch: int) -> int:
+        # NOTE: for ns <= q_chunk the two models coincide exactly
+        # (batch*ns*h*min(q_chunk,ns)*ns == b*h*ns^3), so the threshold
+        # choice only matters for buckets past q_chunk — which are already
+        # >= chunked_len.  A pallas-backend engine routing ns < chunked_len
+        # through the token-wise path therefore needs no pricing override.
         b, h, *_ = score_tensor_shape(self.cfg, ns, batch)
         if ns >= self.chunked_len:
             # token-wise MHA: rows are batch, the score slab is only ever

@@ -7,9 +7,14 @@ three cooperating pieces:
     the XLA shape space is the bucket set, not the set of observed lengths;
   * a compiled-executable cache keyed by ``(bucket, scheme)`` — each bucket
     runs at ONE static batch size (``batch_for_bucket``: token budget,
-    max-batch cap, solo rule for token-wise-MHA lengths, and the admission
-    controller's memory cap), short batches are padded with fully-masked
-    dummy rows, so steady-state serving performs zero recompilations;
+    max-batch cap, and the admission controller's memory cap), short
+    batches are padded with fully-masked dummy rows, so steady-state
+    serving performs zero recompilations.  Buckets at/above the token-wise
+    MHA threshold batch like any other: the chunked path's bias addressing
+    is block-broadcast (protein-major), so the old solo-bucket rule is
+    gone.  Executables are lowered under the engine's kernel backend
+    (``kernels=``, the ``--kernels`` flag): Pallas flash/AAQ kernels or
+    the XLA refs — each served batch records which backend it ran;
   * the token-budget scheduler + AAQ-aware admission controller
     (repro.serving.scheduler / .admission) deciding what runs when.
 
@@ -30,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.schemes import FP16Baseline, QuantScheme, make_scheme
+from repro.kernels import dispatch
 from repro.models.ppm import ppm_forward, tm_score
 from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
 from repro.serving.admission import AdmissionController
@@ -45,7 +51,7 @@ class FoldEngine:
                  buckets: tuple[int, ...] | None = None,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  mem_budget_mb: float | None = None,
-                 fidelity: bool = False, solo_len: int = 256,
+                 fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True):
         self.params = params
         self.cfg = cfg
@@ -57,20 +63,20 @@ class FoldEngine:
         self.buckets = tuple(sorted(buckets or pow2_buckets(16, 512)))
         self.max_tokens_per_batch = max_tokens_per_batch
         self.max_batch = max_batch
-        # clamp to the model's chunked-attention threshold: any bucket at or
-        # above it MUST run solo (the chunked path's bias addressing assumes
-        # one protein per flattened row-batch — see trunk.CHUNKED_ATTN_LEN)
-        self.solo_len = min(solo_len, CHUNKED_ATTN_LEN)
         self.fidelity = fidelity
         self.keep_distogram = keep_distogram
+        if kernels not in dispatch.BACKENDS:
+            raise ValueError(f"kernels must be one of {dispatch.BACKENDS}, "
+                             f"got {kernels!r}")
+        self.kernels = kernels
         budget = None if mem_budget_mb is None else int(mem_budget_mb * 1e6)
-        # pricing threshold is the model's, independent of the solo rule
+        # pricing switches to the chunked score-slab model at the model's
+        # token-wise MHA threshold
         self.admission = AdmissionController(cfg, self.scheme, budget,
                                              chunked_len=CHUNKED_ATTN_LEN)
         self.scheduler = TokenBudgetScheduler(
             self.buckets, max_tokens_per_batch=max_tokens_per_batch,
-            max_batch=max_batch, admission=self.admission,
-            solo_len=self.solo_len)   # clamped — must match batch_for_bucket
+            max_batch=max_batch, admission=self.admission)
         self.metrics = EngineMetrics()
         self._fp_scheme = FP16Baseline()
         self._executables: dict[tuple[int, str], object] = {}
@@ -84,8 +90,6 @@ class FoldEngine:
     def batch_for_bucket(self, bucket: int) -> int:
         """The ONE static batch size this bucket is compiled at."""
         n = min(self.max_batch, max(1, self.max_tokens_per_batch // bucket))
-        if bucket >= self.solo_len:
-            n = 1
         if self.admission.mem_budget_bytes is not None:
             n = max(1, self.admission.max_batch_for(bucket, n))
         return n
@@ -96,7 +100,12 @@ class FoldEngine:
         return self._compile_count
 
     def _executable(self, bucket: int, scheme: QuantScheme):
-        """AOT-compiled forward for (bucket, scheme); cached, counted."""
+        """AOT-compiled forward for (bucket, scheme); cached, counted.
+
+        Lowered under the engine's kernel backend, so a ``kernels='pallas'``
+        engine bakes the Pallas flash/AAQ kernels into every bucketed
+        executable (interpret mode off-TPU).
+        """
         key = (bucket, scheme.name)
         if key in self._executables:
             return self._executables[key], 0.0
@@ -105,7 +114,8 @@ class FoldEngine:
         aat = jax.ShapeDtypeStruct((batch, bucket), jnp.int32)
         msk = jax.ShapeDtypeStruct((batch, bucket), jnp.bool_)
         t0 = time.perf_counter()
-        compiled = fn.lower(self.params, aat, msk).compile()
+        with dispatch.use_backend(self.kernels):
+            compiled = fn.lower(self.params, aat, msk).compile()
         compile_s = time.perf_counter() - t0
         self._executables[key] = compiled
         self._compile_count += 1
@@ -187,6 +197,7 @@ class FoldEngine:
             fp_out = fp_exec(self.params, aat_j, mask_j)
             fp_coords = np.asarray(fp_out["coords"])
 
+        backend = dispatch.describe(self.kernels, seq=bucket)
         results = []
         for row, req in enumerate(batch.requests):
             stripped = strip_padding(host, row, req.length)
@@ -204,7 +215,8 @@ class FoldEngine:
                 queue_wait_ms=(batch_start - req.arrival_time) * 1e3,
                 compile_ms=compile_s * 1e3,
                 run_ms=run_s * 1e3,
-                est_activation_bytes=est))
+                est_activation_bytes=est,
+                kernel_backend=backend))
         for r in results:
             self.metrics.record(r)
         return results

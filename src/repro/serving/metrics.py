@@ -86,14 +86,15 @@ class BucketStats:
 
 
 CSV_HEADER = ("request,len,bucket,batch,status,queue_ms,compile_ms,run_ms,"
-              "tm_vs_fp,padding_frac,est_act_mb")
+              "tm_vs_fp,padding_frac,est_act_mb,kernel_backend")
 
 
 def csv_row(r: FoldResult) -> str:
     tm = "" if r.tm_vs_fp is None else f"{r.tm_vs_fp:.4f}"
     return (f"{r.request_id},{r.length},{r.bucket},{r.batch_size},{r.status},"
             f"{r.queue_wait_ms:.1f},{r.compile_ms:.1f},{r.run_ms:.1f},{tm},"
-            f"{r.padding_frac:.3f},{r.est_activation_bytes / 1e6:.1f}")
+            f"{r.padding_frac:.3f},{r.est_activation_bytes / 1e6:.1f},"
+            f"{r.kernel_backend}")
 
 
 class EngineMetrics:
@@ -162,6 +163,7 @@ class EngineMetrics:
             "run_ms": r.run_ms, "tm_vs_fp": r.tm_vs_fp,
             "padding_frac": r.padding_frac,
             "est_activation_bytes": r.est_activation_bytes,
+            "kernel_backend": r.kernel_backend,
         }
 
     def save(self, path: str) -> None:

@@ -6,9 +6,6 @@ and grows the batch while every constraint holds:
 
   * padded tokens ``(n+1) * bucket <= max_tokens_per_batch``
   * ``n + 1 <= max_batch``
-  * buckets at/above the token-wise-MHA threshold run solo (the chunked
-    attention path's bias addressing assumes one protein per flattened
-    row-batch, and the cubic memory story is per-protein anyway)
   * the admission controller prices the grown batch under the memory
     budget; a growth that would bust the budget stops the batch (the rest
     of the queue is *deferred* to the next batch), and a request whose
@@ -71,15 +68,13 @@ class Rejection:
 class TokenBudgetScheduler:
     def __init__(self, buckets: tuple[int, ...], *,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
-                 admission: AdmissionController | None = None,
-                 solo_len: int = 256):
+                 admission: AdmissionController | None = None):
         if not buckets:
             raise ValueError("need at least one bucket edge")
         self.buckets = tuple(sorted(buckets))
         self.max_tokens_per_batch = max_tokens_per_batch
         self.max_batch = max_batch
         self.admission = admission
-        self.solo_len = solo_len
         self._queues: dict[int, deque[FoldRequest]] = {
             b: deque() for b in self.buckets}
 
@@ -120,8 +115,6 @@ class TokenBudgetScheduler:
     def _may_grow(self, bucket: int, n: int) -> bool:
         """Can the batch grow from n to n+1 requests?"""
         if n >= self.max_batch:
-            return False
-        if n >= 1 and bucket >= self.solo_len:
             return False
         if (n + 1) * bucket > self.max_tokens_per_batch and n >= 1:
             return False          # always admit at least one (ESMFold rule)

@@ -46,6 +46,8 @@ class FoldResult:
     compile_ms: float = 0.0            # 0 on executable-cache hits
     run_ms: float = 0.0
     est_activation_bytes: int = 0      # admission-control price of its batch
+    kernel_backend: str = ""           # dispatch label the batch ran under
+                                       # (ref | pallas | pallas-interpret | auto:*)
 
     @property
     def ok(self) -> bool:

@@ -96,6 +96,29 @@ def test_flash_kernel_vs_ref(case, dtype):
                                np.asarray(o_r, np.float32), rtol=tol, atol=tol)
 
 
+def test_bias_block_broadcast_consistent_across_paths():
+    """bias batch Bb < B broadcasts block-wise (entry t covers the B//Bb
+    consecutive q rows starting at t*B//Bb) — the addressing triangular
+    attention's protein-major row flattening requires.  All three
+    implementations (ref, chunked, Pallas) must agree with an explicitly
+    repeated bias."""
+    bp, n, hq, d = 3, 16, 2, 8         # 3 proteins x 16 flattened rows
+    b = bp * n
+    r = lambda s, key: jax.random.normal(jax.random.PRNGKey(key), s)
+    q, k, v = r((b, n, hq, d), 1), r((b, n, hq, d), 2), r((b, n, hq, d), 3)
+    bias = r((bp, hq, n, n), 4)
+    explicit = jnp.repeat(bias, n, axis=0)             # (b, hq, n, n)
+    o_exp = mha_ref(q, k, v, bias=explicit)
+    o_ref = mha_ref(q, k, v, bias=bias)
+    np.testing.assert_array_equal(np.asarray(o_exp), np.asarray(o_ref))
+    o_chk = mha_chunked(q, k, v, bias=bias, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(o_exp), np.asarray(o_chk),
+                               rtol=2e-5, atol=2e-5)
+    o_pal = flash_mha_pallas(q, k, v, bias, block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(o_exp), np.asarray(o_pal),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("causal,window,bias", [(True, None, False),
                                                 (True, 32, False),
                                                 (False, None, True)])

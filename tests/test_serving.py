@@ -159,18 +159,35 @@ def test_oversized_single_request_still_served_alone():
     assert sched.next_batch().batch_size == 1
 
 
-def test_solo_len_clamped_to_chunked_threshold():
-    """solo_len > CHUNKED_ATTN_LEN must not let the scheduler form a batch
-    bigger than the engine's compiled static batch (regression: crash in
-    pad_to_bucket for bucket >= 256)."""
-    engine = FoldEngine(PARAMS, CFG, SCHEME, buckets=(256,), solo_len=512,
-                        max_tokens_per_batch=1024, max_batch=4)
-    assert engine.solo_len == 256
-    assert engine.batch_for_bucket(256) == 1
-    engine.scheduler.submit(FoldRequest(0, _seq(200)), now=0.0)
-    engine.scheduler.submit(FoldRequest(1, _seq(201)), now=0.1)
-    assert engine.scheduler.next_batch().batch_size == 1
-    assert engine.scheduler.next_batch().batch_size == 1
+def test_scheduler_batches_chunked_buckets():
+    """Buckets at/above the token-wise-MHA threshold batch like any other
+    now that the chunked path's bias addressing is block-broadcast (the
+    solo-bucket carve-out is gone)."""
+    sched = TokenBudgetScheduler((256,), max_tokens_per_batch=1024,
+                                 max_batch=4)
+    for i in range(3):
+        assert sched.submit(FoldRequest(i, _seq(200 + i)), now=float(i)) is None
+    assert sched.next_batch().batch_size == 3
+
+
+def test_chunked_bucket_batch_matches_batch1_bitwise():
+    """The acceptance contract for the chunked-bias fix under the engine:
+    a multi-protein N>=256 bucket (token-wise MHA path, batch 2) yields
+    coords bitwise identical to serving each protein alone in the same
+    bucket."""
+    seqs = [_seq(200), _seq(230)]
+    engine = FoldEngine(PARAMS, CFG, SCHEME, buckets=(256,),
+                        max_tokens_per_batch=512, max_batch=2)
+    assert engine.batch_for_bucket(256) == 2
+    results = engine.run(seqs)
+    assert all(r.ok and r.bucket == 256 and r.batch_size == 2
+               for r in results)
+    solo = FoldEngine(PARAMS, CFG, SCHEME, buckets=(256,),
+                      max_tokens_per_batch=256, max_batch=1)
+    assert solo.batch_for_bucket(256) == 1
+    for r, s in zip(results, seqs):
+        [r1] = solo.run([s])
+        np.testing.assert_array_equal(r.coords, r1.coords)
 
 
 def test_fcfs_across_buckets():
@@ -233,6 +250,28 @@ def test_admission_budget_shrinks_static_batch():
     assert all(r.ok for r in results)
     assert all(r.est_activation_bytes <= two for r in results)
     assert max(r.batch_size for r in results) <= 2
+
+
+# --------------------------------------------------------------------------
+# kernel-backend recording
+# --------------------------------------------------------------------------
+def test_results_record_kernel_backend():
+    """Every served batch records the dispatch backend it was lowered
+    under — the --report column the --kernels flag is audited by."""
+    import io as _io
+
+    from repro.serving.metrics import csv_row
+
+    engine = FoldEngine(PARAMS, CFG, SCHEME, buckets=(32,), kernels="ref",
+                        max_tokens_per_batch=64, max_batch=2)
+    [r] = engine.run([_seq(20)])
+    assert r.kernel_backend == "ref"
+    assert csv_row(r).endswith(",ref")
+    buf = _io.StringIO()
+    engine.metrics.write_json(buf)
+    assert '"kernel_backend": "ref"' in buf.getvalue()
+    with pytest.raises(ValueError):
+        FoldEngine(PARAMS, CFG, SCHEME, kernels="cuda")
 
 
 # --------------------------------------------------------------------------
