@@ -6,7 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--only`` filters the suites (nightly CI runs latency + serving only);
 ``--out`` additionally writes every emitted row as JSON — the artifact the
-nightly workflow uploads so the perf trajectory is tracked per commit.
+nightly workflow uploads so the perf trajectory is tracked per commit —
+and, when the serving suite ran, the repo-root ``BENCH_serving.json``
+(engine-vs-client throughput + latency percentiles) uploaded alongside it.
 """
 from __future__ import annotations
 
@@ -49,12 +51,16 @@ def main(argv=None) -> None:
         if unknown:
             print(f"error: unknown suites {sorted(unknown)}")
             sys.exit(2)
+    serving_summary = None
     for name, mod, label, suite_argv in suites:
         if selected is not None and name not in selected:
             continue
         print(f"# --- {label} ---", flush=True)
         try:
-            mod.main(suite_argv) if suite_argv is not None else mod.main()
+            ret = (mod.main(suite_argv) if suite_argv is not None
+                   else mod.main())
+            if name == "serving" and isinstance(ret, dict):
+                serving_summary = ret
         except Exception as e:                      # pragma: no cover
             traceback.print_exc()
             print(f"{mod.__name__},0,ERROR:{e}")
@@ -67,6 +73,12 @@ def main(argv=None) -> None:
                          for n, us, d in common.ROWS],
             }, fh, indent=2)
         print(f"# rows -> {args.out}", flush=True)
+        if serving_summary is not None:
+            # repo-root artifact: the serving trajectory the nightly job
+            # uploads (engine-vs-client throughput + p99 tails per commit)
+            with open("BENCH_serving.json", "w") as fh:
+                json.dump(serving_summary, fh, indent=2)
+            print("# serving summary -> BENCH_serving.json", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
-"""Serving throughput bench: FoldEngine vs the sequential baseline on the
-same mixed-length request trace (requests/s and tokens/s), plus the
-admission-control bound check — every batch the engine ran must have been
-priced under the peak-activation budget.
+"""Serving throughput bench: legacy FoldEngine.run vs the async FoldClient
+(handle submit + pump) vs the sequential baseline on the same mixed-length
+request trace (requests/s, tokens/s, and p50/p95/p99 queue-wait/run tails),
+plus the admission-control bound check — every batch the engine ran must
+have been priced under the peak-activation budget.
 
-``--kernels {pallas,ref,auto}`` selects the kernel backend for BOTH paths
+``main`` returns a summary dict (engine-vs-client throughput + p99s);
+``benchmarks/run.py --out`` writes it to the repo-root ``BENCH_serving.json``
+the nightly job uploads.
+
+``--kernels {pallas,ref,auto}`` selects the kernel backend for every path
 (the sequential jit traces under it, the engine lowers its bucketed
 executables under it) — the bench never silently falls back to the refs.
+``--priority-split``/``--deadline-s`` shape the client trace the same way
+the serve CLI does.
 
     PYTHONPATH=src python -m benchmarks.serving [--n 16] [--mem-budget-mb 96]
     PYTHONPATH=src python -m benchmarks.serving --kernels pallas
@@ -23,8 +30,10 @@ from repro.configs import reduce_ppm_config
 from repro.core import make_scheme
 from repro.data.pipeline import ProteinSampler
 from repro.kernels import dispatch
+from repro.launch.serve import priority_tiers
 from repro.models.ppm import init_ppm, ppm_forward
-from repro.serving import FoldEngine, pad_to_bucket, parse_buckets
+from repro.serving import (EngineMetrics, FoldEngine, pad_to_bucket,
+                           parse_buckets)
 
 
 def _trace(n: int, min_len: int, max_len: int):
@@ -53,7 +62,20 @@ def bench_engine(engine, seqs):
     return engine.metrics.wall_s, results
 
 
-def main(argv=None) -> None:
+def bench_client(client, seqs, tiers, deadline_s):
+    """Handle-based path: submit everything, pump, wait on every handle."""
+    client.core.metrics = EngineMetrics()
+    t0 = time.perf_counter()
+    handles = [client.submit(s, priority=p, deadline_s=deadline_s)
+               for s, p in zip(seqs, tiers)]
+    client.drive()
+    results = [h.result() for h in handles]
+    wall = time.perf_counter() - t0
+    client.core.metrics.wall_s = wall
+    return wall, results
+
+
+def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=16)
     ap.add_argument("--min-len", type=int, default=24)
@@ -63,6 +85,8 @@ def main(argv=None) -> None:
     ap.add_argument("--max-tokens-per-batch", type=int, default=512)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--mem-budget-mb", type=float, default=None)
+    ap.add_argument("--priority-split", type=float, default=0.25)
+    ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
                     default=dispatch.AUTO)
     args = ap.parse_args(argv)
@@ -100,12 +124,30 @@ def main(argv=None) -> None:
     compiles_after_cold = engine.compile_count
     eng_warm, results = bench_engine(engine, seqs)
     assert engine.compile_count == compiles_after_cold, "steady state recompiled"
+    eng_summary = engine.metrics.summary()
     emit("serving.engine.cold", eng_cold * 1e6,
          f"{len(seqs) / eng_cold:.2f}req/s {tokens / eng_cold:.1f}tok/s "
          f"compiles={compiles_after_cold} kernels={backend}")
     emit("serving.engine.warm", eng_warm * 1e6,
          f"{len(seqs) / eng_warm:.2f}req/s {tokens / eng_warm:.1f}tok/s "
-         f"speedup_vs_seq={seq_warm / eng_warm:.2f}x")
+         f"speedup_vs_seq={seq_warm / eng_warm:.2f}x "
+         f"p99_wait_ms={eng_summary['queue_wait_ms']['p99']:.1f} "
+         f"p99_run_ms={eng_summary['run_ms']['p99']:.1f}")
+
+    # the handle-based client path on the SAME core (warm executables):
+    # measures lifecycle overhead (handles, events, priority scheduling)
+    # over the raw engine pump
+    tiers = priority_tiers(len(seqs), args.priority_split)
+    client = engine.client
+    cli_warm, cli_results = bench_client(client, seqs, tiers,
+                                         args.deadline_s)
+    assert engine.compile_count == compiles_after_cold, "client recompiled"
+    cli_summary = client.metrics.summary()
+    emit("serving.client.warm", cli_warm * 1e6,
+         f"{len(seqs) / cli_warm:.2f}req/s {tokens / cli_warm:.1f}tok/s "
+         f"overhead_vs_engine={cli_warm / eng_warm:.3f}x "
+         f"p99_wait_ms={cli_summary['queue_wait_ms']['p99']:.1f} "
+         f"expired={cli_summary['expired']}")
 
     served = [r for r in results if r.ok]
     peak = max((r.est_activation_bytes for r in served), default=0)
@@ -117,6 +159,26 @@ def main(argv=None) -> None:
     emit("serving.admission.peak_est", 0.0,
          f"{peak / 1e6:.1f}MB<=budget={budget}MB "
          f"rejected={len(results) - len(served)}")
+
+    return {
+        "n_requests": len(seqs),
+        "tokens": tokens,
+        "kernels": backend,
+        "priority_split": args.priority_split,
+        "deadline_s": args.deadline_s,
+        "sequential": {"warm_s": seq_warm,
+                       "req_per_s": len(seqs) / seq_warm},
+        "engine": {"warm_s": eng_warm, "req_per_s": len(seqs) / eng_warm,
+                   "queue_wait_ms": eng_summary["queue_wait_ms"],
+                   "run_ms": eng_summary["run_ms"]},
+        "client": {"warm_s": cli_warm, "req_per_s": len(seqs) / cli_warm,
+                   "queue_wait_ms": cli_summary["queue_wait_ms"],
+                   "run_ms": cli_summary["run_ms"],
+                   "served": cli_summary["served"],
+                   "expired": cli_summary["expired"]},
+        "admission": {"peak_est_mb": peak / 1e6,
+                      "budget_mb": args.mem_budget_mb},
+    }
 
 
 if __name__ == "__main__":

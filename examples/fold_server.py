@@ -1,8 +1,10 @@
-"""End-to-end serving example (the paper's workload kind): mixed-length
-protein-folding traffic through the continuous-batching ``FoldEngine`` —
-length-bucketed compilation, token-budget batching, AAQ-aware admission
-control — reporting per-request queue wait, latency, TM-vs-FP fidelity,
-padding waste, and the priced activation memory of each batch.
+"""End-to-end request-lifecycle serving example (the paper's workload
+kind): mixed-length protein-folding traffic through ``FoldClient`` —
+handles with priorities/deadlines/cancellation, a typed progress-event
+stream, and the bucketed continuous-batching ``EngineCore`` underneath
+(length-bucketed compilation, token-budget batching, AAQ-aware admission
+control) — reporting per-request queue wait, latency, TM-vs-FP fidelity,
+and p50/p95/p99 latency tails.
 
     PYTHONPATH=src python examples/fold_server.py
 """
@@ -17,31 +19,61 @@ import numpy as np
 from repro.configs import reduce_ppm_config
 from repro.data.pipeline import ProteinSampler
 from repro.models.ppm import init_ppm
-from repro.serving import CSV_HEADER, FoldEngine, csv_row
+from repro.serving import (CSV_HEADER, FoldClient, check_request_order,
+                           csv_row)
 
 
 def main() -> int:
     cfg = reduce_ppm_config()
     params = init_ppm(jax.random.PRNGKey(0), cfg)
-    engine = FoldEngine(params, cfg, "lightnobel_aaq",
+    client = FoldClient(params, cfg, "lightnobel_aaq",
                         buckets=(32, 48), max_tokens_per_batch=128,
                         max_batch=4, mem_budget_mb=256.0, fidelity=True)
+    stream = client.stream()                       # pull-side event iterator
+    client.subscribe(lambda e: print(f"## event {e}")
+                     if e.kind in ("cancelled", "expired") else None)
 
     sampler = ProteinSampler(seed=11, min_len=24, max_len=48)
     trace = [sampler.sample(i) for i in range(6)]
-    results = engine.run(trace)
+
+    # two priority tiers: even requests are latency-sensitive (priority 1)
+    handles = [client.submit(seq, priority=1 - (i % 2))
+               for i, seq in enumerate(trace)]
+    # one caller changes its mind before anything is scheduled
+    victim = client.submit(sampler.sample(99), priority=0)
+    assert victim.cancel() and victim.status == "CANCELLED"
+
+    client.drive()                                 # inline pump (threadless)
+    results = [h.result() for h in handles]        # all DONE already
 
     print(CSV_HEADER)
     for r in results:
         print(csv_row(r))
-    s = engine.metrics.summary()
+    s = client.metrics.summary()
     print(f"# compiles={s['compiles']} (one per (bucket, scheme)) "
-          f"req/s={s['requests_per_s']:.2f} tok/s={s['tokens_per_s']:.1f}")
+          f"served={s['served']} cancelled={s['cancelled']} "
+          f"wait_p95_ms={s['queue_wait_ms']['p95']:.1f}")
+
+    # the event stream tells each request's full story, in order
+    events = stream.events()
+    for h in handles + [victim]:
+        per_req = [e for e in events if e.request_id == h.request_id]
+        check_request_order(per_req)
+    kinds = {e.kind for e in events}
+    assert "completed" in kinds and "cancelled" in kinds
+
+    # handles traverse legal transitions only; high priority never waits
+    # behind low within a bucket
+    for h in handles:
+        assert [s for s, _ in h.transitions] == \
+            ["QUEUED", "ADMITTED", "RUNNING", "DONE"]
+
     # steady state: the same traffic mix again — zero new compilations
-    before = engine.compile_count
-    engine.run([sampler.sample(100 + i) for i in range(6)])
-    print(f"# steady-state wave: new_compiles={engine.compile_count - before}")
-    assert engine.compile_count == before
+    before = client.core.compile_count
+    client.run([sampler.sample(100 + i) for i in range(6)])
+    print(f"# steady-state wave: new_compiles="
+          f"{client.core.compile_count - before}")
+    assert client.core.compile_count == before
     # coords are real-token-only (padding stripped)
     for r, seq in zip(results, trace):
         assert r.coords.shape == (len(seq), 3)

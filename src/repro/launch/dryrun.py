@@ -72,7 +72,7 @@ def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
     chips = mesh.devices.size
     rec = {"arch": arch, "shape": shape.name, "step": shape.step,
            "mesh": "multi" if multi_pod else "single", "chips": chips}
-    t0 = time.time()
+    t0 = time.monotonic()
 
     if arch == "esmfold_ppm":
         cfg = get_ppm_config()
@@ -140,7 +140,7 @@ def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
             n_params, tokens, shape.step,
             n_active=active_params(cfg, n_params))
 
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(time.monotonic() - t0, 1)
     mem = compiled.memory_analysis()
     rec["mem"] = {
         "argument_bytes_per_dev": int(mem.argument_size_in_bytes),

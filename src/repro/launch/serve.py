@@ -1,12 +1,15 @@
 """Serving launcher — the paper's workload class (inference).
 
 Two services:
-  * ``--mode ppm``  — protein folding through the continuous-batching
-    ``FoldEngine`` (repro.serving): length-bucketed compilation (one
-    executable per (bucket, scheme)), token-budget batching, AAQ-aware
-    admission control, per-request queue-wait/latency/TM-vs-FP reporting.
-    ``--no-engine`` keeps the one-request-at-a-time fallback (same bucket
-    padding, so both paths produce bitwise-identical real-token coords).
+  * ``--mode ppm``  — protein folding through the request-lifecycle
+    ``FoldClient`` (repro.serving): ``submit()`` returns handles with
+    priorities (``--priority-split``) and deadlines (``--deadline-s``),
+    progress streams as typed events, and batches run on the bucketed
+    ``EngineCore`` (one executable per (bucket, scheme), token-budget
+    batching, AAQ-aware admission control) driven by a background thread
+    (``--driver thread``) or the inline pump.  ``--no-engine`` keeps the
+    one-request-at-a-time fallback (same bucket padding, so both paths
+    produce bitwise-identical real-token coords).
   * ``--mode lm``   — batched token serving for any zoo arch: prefill once,
     then steady-state decode with the ring KV cache (AAQ-on-KV optional).
 
@@ -18,6 +21,8 @@ interpret mode.  ``--report`` rows record the backend each batch ran under.
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8 \
         --max-tokens-per-batch 256 --mem-budget-mb 64 --buckets 32,64
+    PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8 \
+        --priority-split 0.25 --deadline-s 30 --driver thread
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --kernels pallas
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
 """
@@ -37,7 +42,7 @@ from repro.kernels import dispatch
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
-from repro.serving import (CSV_HEADER, FoldEngine, csv_row, pad_to_bucket,
+from repro.serving import (CSV_HEADER, FoldClient, csv_row, pad_to_bucket,
                            parse_buckets)
 
 
@@ -45,6 +50,14 @@ def _sample_trace(args) -> list[np.ndarray]:
     sampler = ProteinSampler(seed=11, min_len=args.min_len,
                              max_len=args.max_len)
     return [sampler.sample(i) for i in range(args.n)]
+
+
+def priority_tiers(n: int, split: float) -> list[int]:
+    """Deterministic two-tier assignment: a ``split`` fraction of requests
+    (interleaved, not front-loaded) get priority 1, the rest 0."""
+    split = min(max(split, 0.0), 1.0)
+    return [1 if int((i + 1) * split) > int(i * split) else 0
+            for i in range(n)]
 
 
 def _serve_ppm_sequential(args, cfg, params, seqs, buckets) -> int:
@@ -93,30 +106,51 @@ def serve_ppm(args):
     if args.no_engine:
         return _serve_ppm_sequential(args, cfg, params, seqs, buckets)
 
-    engine = FoldEngine(
+    client = FoldClient(
         params, cfg, args.scheme, buckets=buckets,
         max_tokens_per_batch=args.max_tokens_per_batch,
         max_batch=args.max_batch, mem_budget_mb=args.mem_budget_mb,
         fidelity=not args.no_fidelity, kernels=args.kernels)
     if args.warmup:
-        engine.warmup()
-    results = engine.run(seqs)
+        client.warmup()
+    tiers = priority_tiers(len(seqs), args.priority_split)
+    t0 = time.perf_counter()
+    if args.driver == "thread":
+        client.start()
+    handles = [client.submit(s, priority=p, deadline_s=args.deadline_s)
+               for s, p in zip(seqs, tiers)]
+    if args.driver == "thread":
+        for h in handles:
+            if not h.done:
+                h.result(timeout=600.0)
+        client.stop()
+    else:
+        client.drive()
+    client.metrics.wall_s = time.perf_counter() - t0
+    results = sorted(client.metrics.results, key=lambda r: r.request_id)
     print(CSV_HEADER)
     for r in results:
         print(csv_row(r))
-    s = engine.metrics.summary()
-    print(f"# served={s['served']}/{s['requests']} compiles={s['compiles']} "
+    s = client.metrics.summary()
+    print(f"# served={s['served']}/{s['requests']} "
+          f"rejected={s['rejected']} expired={s['expired']} "
+          f"compiles={s['compiles']} "
           f"req/s={s['requests_per_s']:.2f} tok/s={s['tokens_per_s']:.1f} "
           f"kernels={dispatch.describe(args.kernels)} "
           f"max_est_act_mb={s['max_est_act_mb']:.1f}"
           + (f" budget_mb={args.mem_budget_mb:.1f}"
              if args.mem_budget_mb else ""))
+    print(f"# queue_wait_ms p50={s['queue_wait_ms']['p50']:.1f} "
+          f"p95={s['queue_wait_ms']['p95']:.1f} "
+          f"p99={s['queue_wait_ms']['p99']:.1f} "
+          f"| run_ms p50={s['run_ms']['p50']:.1f} "
+          f"p95={s['run_ms']['p95']:.1f} p99={s['run_ms']['p99']:.1f}")
     for b in s["buckets"]:
         print(f"# bucket={b['bucket']} n={b['requests']} "
               f"compiles={b['compiles']} wait_ms={b['mean_queue_wait_ms']:.1f} "
               f"run_ms={b['mean_run_ms']:.1f} waste={b['padding_waste']:.2f}")
     if args.report:
-        engine.metrics.save(args.report)
+        client.metrics.save(args.report)
         print(f"# report -> {args.report}")
     return 0
 
@@ -174,6 +208,16 @@ def main(argv=None):
                     help="peak-activation budget for admission control")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile every bucket before serving")
+    ap.add_argument("--priority-split", type=float, default=0.0,
+                    help="fraction of requests submitted at priority 1 "
+                         "(interleaved); the rest run at priority 0")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request queue deadline; requests still "
+                         "queued past it expire instead of running")
+    ap.add_argument("--driver", choices=["inline", "thread"],
+                    default="inline",
+                    help="pump the client inline after submitting, or on "
+                         "the background driver thread (async submit)")
     ap.add_argument("--report", default=None,
                     help="write per-request metrics to this .csv/.json path")
     ap.add_argument("--arch", default="qwen1.5-0.5b")

@@ -92,9 +92,9 @@ def main(argv=None):
         DriverConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                      ckpt_dir=args.ckpt_dir, fail_at_step=args.fail_at),
         train_one, init_state)
-    t0 = time.time()
+    t0 = time.monotonic()
     state = driver.run()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     losses = [h["loss"] for h in driver.history]
     print(f"done: {len(driver.history)} steps in {dt:.1f}s | "
           f"loss {losses[0]:.3f} -> {np.mean(losses[-5:]):.3f} | "

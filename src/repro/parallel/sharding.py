@@ -33,6 +33,22 @@ DATA = "data"            # logical data axis (maps to ("pod","data") multi-pod)
 MODEL = "model"
 
 
+def shard_map_compat(fn, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map(..., check_vma=)``; 0.4.x only has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  Feature-
+    detect at call time so the parallel layer (and tests) run on both.
+    """
+    try:
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    except (AttributeError, TypeError):
+        from jax.experimental.shard_map import shard_map
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=check)
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1

@@ -1,23 +1,42 @@
-"""repro.serving — continuous-batching fold-serving engine.
+"""repro.serving — request-lifecycle fold-serving.
 
-Bucketed compilation (one executable per (bucket, scheme)), token-budget
-continuous batching, and AAQ-aware admission control that turns the paper's
-Table-1 activation accounting into a live memory-budget scheduling signal.
+``FoldClient`` is the serving surface: ``submit()`` returns a ``FoldHandle``
+(priority, deadline, ``cancel()``, blocking ``result()``), progress streams
+as typed ``FoldEvent``s, and batches execute on the bucketed-compilation
+``EngineCore`` (one executable per (bucket, scheme), token-budget continuous
+batching, AAQ-aware admission control that turns the paper's Table-1
+activation accounting into a live memory-budget scheduling signal).
+``FoldEngine`` is the legacy blocking wrapper over the same client.
 """
 from repro.serving.admission import (ADMIT, DEFER, REJECT, AdmissionController,
                                      AdmissionDecision)
-from repro.serving.engine import FoldEngine
+from repro.serving.client import (ADMITTED, CANCELLED, DONE, EXPIRED,
+                                  HANDLE_STATES, LEGAL_TRANSITIONS, QUEUED,
+                                  REJECTED as HANDLE_REJECTED, RUNNING,
+                                  TERMINAL_STATES, FoldClient, FoldHandle)
+from repro.serving.engine import EngineCore, FoldEngine
+from repro.serving.events import (EVENT_KINDS, EVENT_ORDER, TERMINAL_EVENTS,
+                                  EventBus, EventStream, FoldEvent,
+                                  check_request_order)
 from repro.serving.metrics import (CSV_HEADER, CompileWatcher, EngineMetrics,
-                                   csv_row)
+                                   csv_row, percentiles)
 from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
                                      parse_buckets, pow2_buckets)
 from repro.serving.types import (FoldRequest, FoldResult, pad_to_bucket,
                                  strip_padding)
 
 __all__ = [
-    "FoldEngine", "FoldRequest", "FoldResult",
+    # lifecycle client
+    "FoldClient", "FoldHandle", "HANDLE_STATES", "LEGAL_TRANSITIONS",
+    "TERMINAL_STATES", "QUEUED", "ADMITTED", "RUNNING", "DONE",
+    "HANDLE_REJECTED", "CANCELLED", "EXPIRED",
+    # events
+    "FoldEvent", "EventBus", "EventStream", "EVENT_KINDS", "EVENT_ORDER",
+    "TERMINAL_EVENTS", "check_request_order",
+    # engine core + legacy wrapper
+    "EngineCore", "FoldEngine", "FoldRequest", "FoldResult",
     "AdmissionController", "AdmissionDecision", "ADMIT", "DEFER", "REJECT",
     "TokenBudgetScheduler", "ScheduledBatch", "pow2_buckets", "parse_buckets",
-    "EngineMetrics", "CompileWatcher", "CSV_HEADER", "csv_row",
+    "EngineMetrics", "CompileWatcher", "CSV_HEADER", "csv_row", "percentiles",
     "pad_to_bucket", "strip_padding",
 ]

@@ -34,6 +34,16 @@ class AdmissionDecision:
     budget_bytes: int | None
     reason: str = ""
 
+    def event_data(self) -> dict:
+        """Telemetry payload for the client's DEFERRED/REJECTED events."""
+        return {
+            "verdict": self.verdict,
+            "est_mb": self.est_bytes / 1e6,
+            "budget_mb": (None if self.budget_bytes is None
+                          else self.budget_bytes / 1e6),
+            "reason": self.reason,
+        }
+
 
 class AdmissionController:
     """Prices (bucket, batch) candidates against a peak-activation budget."""

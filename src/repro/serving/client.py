@@ -1,0 +1,480 @@
+"""FoldClient: the request-lifecycle serving API over the EngineCore.
+
+``submit()`` returns a ``FoldHandle`` immediately; the engine core only
+runs when the pump loop turns — either inline (``drive()`` — deterministic,
+threadless, what tests and the legacy ``FoldEngine`` wrapper use) or on the
+background driver thread (``start()``/``stop()`` — what a server uses so
+``submit``/``result`` are fully async).
+
+Handle lifecycle (the only legal transitions)::
+
+    QUEUED ──► ADMITTED ──► RUNNING ──► DONE
+      │ ╲
+      │  ╲──► CANCELLED          (handle.cancel() before admission)
+      ├─────► EXPIRED            (deadline passed while queued)
+    [REJECTED]                   (terminal at submit: too long, or the
+                                  bucket busts the memory budget alone)
+
+Admission verdicts surface as lifecycle state, not strings: REJECT becomes
+a ``REJECTED`` handle (+ terminal FoldResult), DEFER keeps the handle
+``QUEUED`` and emits a ``DEFERRED`` event carrying the pricing telemetry.
+
+Every transition emits a typed ``FoldEvent`` on the client's ``EventBus``
+(see repro.serving.events) — consume via ``subscribe(callback)`` or the
+buffering ``stream()`` iterator.
+
+Clock: one monotonic clock (injectable ``clock=``, default
+``time.monotonic``) stamps arrivals, deadlines, batch starts, and event
+timestamps.  Tests inject a manual clock to script deadline expiry.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.serving import events as ev
+from repro.serving.engine import EngineCore
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import ScheduledBatch, TokenBudgetScheduler
+from repro.serving.types import (CANCELLED as R_CANCELLED, EXPIRED as
+                                 R_EXPIRED, FAILED as R_FAILED,
+                                 REJECTED as R_REJECTED, FoldRequest,
+                                 FoldResult)
+
+# -- handle states ----------------------------------------------------------
+QUEUED = "QUEUED"        # accepted into the scheduler queue
+ADMITTED = "ADMITTED"    # picked into a ScheduledBatch under the budget
+RUNNING = "RUNNING"      # its batch is executing on the core
+DONE = "DONE"            # result available
+REJECTED = "REJECTED"    # never servable (terminal at submit)
+CANCELLED = "CANCELLED"  # cancel() won while still queued
+EXPIRED = "EXPIRED"      # deadline passed while still queued
+
+HANDLE_STATES = (QUEUED, ADMITTED, RUNNING, DONE, REJECTED, CANCELLED,
+                 EXPIRED)
+TERMINAL_STATES = frozenset({DONE, REJECTED, CANCELLED, EXPIRED})
+
+#: the full legal-transition relation — FoldHandle enforces it, tests
+#: assert recorded trajectories against it
+LEGAL_TRANSITIONS: dict[str, frozenset[str]] = {
+    QUEUED: frozenset({ADMITTED, CANCELLED, EXPIRED}),
+    ADMITTED: frozenset({RUNNING}),
+    RUNNING: frozenset({DONE}),
+    DONE: frozenset(),
+    REJECTED: frozenset(),
+    CANCELLED: frozenset(),
+    EXPIRED: frozenset(),
+}
+
+
+class FoldHandle:
+    """Future-like view of one submitted request.
+
+    Thread-safe; created by ``FoldClient.submit`` only.  ``transitions``
+    records every (state, t) the handle passed through, in order — the
+    auditable trajectory the lifecycle tests check against
+    ``LEGAL_TRANSITIONS``.
+    """
+
+    def __init__(self, client: "FoldClient", request: FoldRequest,
+                 initial: str, t: float):
+        self._client = client
+        self._request = request
+        self._status = initial
+        self._result: FoldResult | None = None
+        self.transitions: list[tuple[str, float]] = [(initial, t)]
+
+    # -- identity / scheduling attrs --
+    @property
+    def request_id(self) -> int:
+        return self._request.request_id
+
+    @property
+    def length(self) -> int:
+        return self._request.length
+
+    @property
+    def priority(self) -> int:
+        return self._request.priority
+
+    @property
+    def deadline_s(self) -> float | None:
+        return self._request.deadline_s
+
+    # -- state --
+    @property
+    def status(self) -> str:
+        with self._client._lock:
+            return self._status
+
+    @property
+    def done(self) -> bool:
+        return self.status in TERMINAL_STATES
+
+    def _advance(self, new: str, t: float) -> None:
+        """Transition under the client lock; raises on an illegal edge."""
+        if new not in LEGAL_TRANSITIONS[self._status]:
+            raise RuntimeError(
+                f"illegal handle transition {self._status} -> {new} "
+                f"(request {self.request_id})")
+        self._status = new
+        self.transitions.append((new, t))
+
+    # -- consumption --
+    def cancel(self) -> bool:
+        """Cancel if still queued.  True iff this call removed the request
+        — a cancelled request never occupies a batch slot.  False once the
+        request was admitted into a batch or reached any terminal state."""
+        return self._client._cancel(self)
+
+    def result(self, timeout: float | None = None) -> FoldResult:
+        """Block until terminal; returns the FoldResult (whose ``status``
+        distinguishes ok/rejected/cancelled/expired).  With no background
+        driver running, pumps the client inline on the calling thread.
+        Raises TimeoutError if ``timeout`` elapses first."""
+        return self._client._wait(self, timeout)
+
+    def __repr__(self) -> str:
+        return (f"FoldHandle(id={self.request_id}, len={self.length}, "
+                f"prio={self.priority}, status={self.status})")
+
+
+class FoldClient:
+    def __init__(self, params, cfg, scheme=None, *,
+                 buckets: tuple[int, ...] | None = None,
+                 max_tokens_per_batch: int = 1024, max_batch: int = 8,
+                 mem_budget_mb: float | None = None, fidelity: bool = False,
+                 kernels: str | None = None, keep_distogram: bool = True,
+                 clock: Callable[[], float] = time.monotonic,
+                 core: EngineCore | None = None):
+        if core is None:
+            from repro.kernels import dispatch
+            core = EngineCore(
+                params, cfg, scheme, buckets=buckets,
+                max_tokens_per_batch=max_tokens_per_batch,
+                max_batch=max_batch, mem_budget_mb=mem_budget_mb,
+                fidelity=fidelity,
+                kernels=dispatch.AUTO if kernels is None else kernels,
+                keep_distogram=keep_distogram, clock=clock)
+        self.core = core
+        self.clock = core.clock
+        self.scheduler = TokenBudgetScheduler(
+            core.buckets, max_tokens_per_batch=core.max_tokens_per_batch,
+            max_batch=core.max_batch, admission=core.admission)
+        self.events = ev.EventBus(clock=self.clock)
+        # live (non-terminal) requests only: handles unindex on reaching a
+        # terminal state so a long-running server's memory is bounded by
+        # queue depth, not total requests served (callers keep their own
+        # handle references; results ride on the handle, not this dict)
+        self.handles: dict[int, FoldHandle] = {}
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._next_id = 0
+        self._driver: threading.Thread | None = None
+        self._stop = False
+        self.driver_errors: list[Exception] = []
+
+    # -- metrics passthrough ----------------------------------------------
+    @property
+    def metrics(self) -> EngineMetrics:
+        return self.core.metrics
+
+    @property
+    def pending(self) -> int:
+        return self.scheduler.pending
+
+    def warmup(self) -> None:
+        self.core.warmup()
+
+    def subscribe(self, callback) -> Callable[[], None]:
+        return self.events.subscribe(callback)
+
+    def stream(self) -> ev.EventStream:
+        return self.events.stream()
+
+    # -- intake -----------------------------------------------------------
+    def submit(self, seq: np.ndarray | FoldRequest, *, priority: int = 0,
+               deadline_s: float | None = None) -> FoldHandle:
+        """Queue a sequence; returns its handle immediately (status QUEUED,
+        or REJECTED if it can never be served).  Pass scheduling attributes
+        either on a FoldRequest or via the kwargs, not both."""
+        if isinstance(seq, FoldRequest) and (priority != 0
+                                             or deadline_s is not None):
+            raise ValueError("priority/deadline_s kwargs conflict with an "
+                             "explicit FoldRequest — set them on the request")
+        with self._lock:
+            if isinstance(seq, FoldRequest):
+                req = seq
+                if req.request_id in self.handles:
+                    raise ValueError(f"request_id {req.request_id} is "
+                                     f"already live on this client")
+            else:
+                req = FoldRequest(self._next_id, np.asarray(seq, np.int32),
+                                  priority=priority, deadline_s=deadline_s)
+            self._next_id = max(self._next_id, req.request_id) + 1
+            now = self.clock()
+            rej = self.scheduler.submit(req, now)
+            meta = {"length": req.length, "priority": req.priority,
+                    "deadline_s": req.deadline_s}
+            # events are sequenced + stream-delivered HERE, under the lock
+            # (so a racing driver thread cannot sequence SCHEDULED ahead of
+            # SUBMITTED); subscriber callbacks run in dispatch(), off-lock
+            if rej is not None:
+                handle = FoldHandle(self, req, REJECTED, now)
+                handle._result = FoldResult(
+                    request_id=req.request_id, length=req.length,
+                    status=R_REJECTED, reason=rej.reason,
+                    priority=req.priority,
+                    bucket=self.core.bucket_for(req.length) or 0)
+                self.core.metrics.record(handle._result)
+                self.events.emit(ev.SUBMITTED, req.request_id, **meta)
+                self.events.emit(ev.REJECTED, req.request_id,
+                                 reason=rej.reason, **meta)
+            else:
+                handle = FoldHandle(self, req, QUEUED, now)
+                self.handles[req.request_id] = handle   # live-handle index
+                self.events.emit(ev.SUBMITTED, req.request_id, **meta)
+            self._cond.notify_all()          # wake the background driver
+        self.events.dispatch()               # callbacks run OFF the lock
+        return handle
+
+    # -- lifecycle: cancellation / expiry ---------------------------------
+    def _cancel(self, handle: FoldHandle) -> bool:
+        with self._lock:
+            if handle._status != QUEUED:
+                return False
+            removed = self.scheduler.cancel(handle.request_id)
+            if not removed:       # already popped into a forming batch
+                return False
+            now = self.clock()
+            handle._request.cancelled = True
+            handle._advance(CANCELLED, now)
+            handle._result = FoldResult(
+                request_id=handle.request_id, length=handle.length,
+                status=R_CANCELLED, reason="cancelled by client",
+                priority=handle.priority,
+                bucket=self.core.bucket_for(handle.length) or 0,
+                queue_wait_ms=(now - handle._request.arrival_time) * 1e3)
+            self.core.metrics.record(handle._result)
+            self.handles.pop(handle.request_id, None)   # terminal: unindex
+            self.events.emit(ev.CANCELLED, handle.request_id,
+                             queued_ms=(now - handle._request.arrival_time)
+                             * 1e3)
+            self._cond.notify_all()
+        self.events.dispatch()
+        return True
+
+    def _expire_due(self, now: float) -> list[FoldResult]:
+        """Purge deadline-passed queued requests (caller holds the lock and
+        dispatches the emitted events once it releases it)."""
+        out = []
+        for req in self.scheduler.purge_expired(now):
+            handle = self.handles.pop(req.request_id)
+            handle._advance(EXPIRED, now)
+            handle._result = FoldResult(
+                request_id=req.request_id, length=req.length,
+                status=R_EXPIRED, priority=req.priority,
+                reason=f"deadline {req.deadline_s:.3f}s passed in queue",
+                bucket=self.core.bucket_for(req.length) or 0,
+                queue_wait_ms=(now - req.arrival_time) * 1e3)
+            self.core.metrics.record(handle._result)
+            self.events.emit(ev.EXPIRED, req.request_id,
+                             deadline_s=req.deadline_s,
+                             queued_ms=(now - req.arrival_time) * 1e3)
+            out.append(handle._result)
+        if out:
+            self._cond.notify_all()
+        return out
+
+    # -- the pump ---------------------------------------------------------
+    def _form_batch(self) -> tuple[ScheduledBatch | None, list[FoldResult]]:
+        """One scheduling turn: expire, pick, mark RUNNING.  Events are
+        sequenced under the lock (order = lifecycle order), callbacks
+        dispatched after it releases."""
+        try:
+            with self._lock:
+                now = self.clock()
+                expired = self._expire_due(now)
+                batch = self.scheduler.next_batch()
+                if batch is None or not batch.requests:
+                    return None, expired
+                if batch.deferred:
+                    d = self.core.admission.admit(batch.bucket,
+                                                  batch.batch_size + 1)
+                    for rid in batch.deferred:
+                        self.events.emit(ev.DEFERRED, rid,
+                                         bucket=batch.bucket,
+                                         **d.event_data())
+                ids = tuple(r.request_id for r in batch.requests)
+                for req in batch.requests:
+                    h = self.handles[req.request_id]
+                    h._advance(ADMITTED, now)
+                    self.events.emit(ev.SCHEDULED, req.request_id,
+                                     bucket=batch.bucket,
+                                     batch_size=batch.batch_size,
+                                     est_mb=batch.est_bytes / 1e6)
+                t_start = self.clock()
+                for req in batch.requests:
+                    self.handles[req.request_id]._advance(RUNNING, t_start)
+                    self.events.emit(ev.BATCH_START, req.request_id,
+                                     bucket=batch.bucket, batch=ids)
+                return batch, expired
+        finally:
+            self.events.dispatch()
+
+    def _finish_batch(self, batch: ScheduledBatch,
+                      results: list[FoldResult]) -> None:
+        with self._lock:
+            now = self.clock()
+            for res in results:
+                handle = self.handles.pop(res.request_id)  # terminal: unindex
+                self.events.emit(ev.BATCH_DONE, res.request_id,
+                                 bucket=batch.bucket, run_ms=res.run_ms,
+                                 compile_ms=res.compile_ms,
+                                 error=res.reason or None)
+                handle._result = res
+                handle._advance(DONE, now)
+                self.events.emit(ev.COMPLETED, res.request_id,
+                                 queue_wait_ms=res.queue_wait_ms,
+                                 run_ms=res.run_ms, tm_vs_fp=res.tm_vs_fp,
+                                 status=res.status,
+                                 kernel_backend=res.kernel_backend)
+            self._cond.notify_all()
+        self.events.dispatch()
+
+    def drive(self, max_batches: int | None = None) -> list[FoldResult]:
+        """Inline pump: serve batches until the queue is empty (or
+        ``max_batches``).  Returns every result that became terminal during
+        the call (served + expired), in completion order."""
+        out: list[FoldResult] = []
+        n = 0
+        while max_batches is None or n < max_batches:
+            batch, expired = self._form_batch()
+            out.extend(expired)
+            if batch is None:
+                break
+            try:
+                results = self.core.execute(batch)   # off the lock: the slow
+            except Exception as e:                   # part; a failed batch
+                # must still terminate its handles — RUNNING forever would
+                # hang every result() waiter
+                results = [FoldResult(
+                    request_id=r.request_id, length=r.length,
+                    status=R_FAILED, priority=r.priority,
+                    reason=f"batch execution failed: {e!r}",
+                    bucket=batch.bucket, batch_size=len(batch.requests))
+                    for r in batch.requests]
+                for res in results:
+                    self.core.metrics.record(res)
+            self._finish_batch(batch, results)
+            out.extend(results)
+            n += 1
+        return out
+
+    def run(self, seqs: Iterable[np.ndarray], *,
+            reset_metrics: bool = True) -> list[FoldResult]:
+        """Submit a trace, drain it, return results in request order
+        (the legacy ``FoldEngine.run`` contract)."""
+        if reset_metrics:
+            self.core.metrics = EngineMetrics()
+        t0 = time.perf_counter()
+        for s in seqs:
+            self.submit(s)
+        self.drive()
+        self.core.metrics.wall_s = time.perf_counter() - t0
+        return sorted(self.core.metrics.results, key=lambda r: r.request_id)
+
+    # -- background driver -------------------------------------------------
+    def start(self) -> None:
+        """Start the background driver thread (idempotent)."""
+        with self._lock:
+            if self._driver is not None and self._driver.is_alive():
+                return
+            self._stop = False
+            self._driver = threading.Thread(
+                target=self._driver_loop, name="fold-client-driver",
+                daemon=True)
+            self._driver.start()
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the driver; with ``drain`` (default) pump the queue dry
+        inline first so no accepted request is abandoned.  Blocks until the
+        driver thread exits — it may be mid-compile, so this can take a
+        while; a timed join would risk two threads pumping the core."""
+        with self._lock:
+            self._stop = True
+            self._cond.notify_all()
+        d = self._driver
+        if d is not None:
+            d.join()
+        self._driver = None
+        if drain:
+            self.drive()
+        self.events.close()
+
+    @property
+    def driving(self) -> bool:
+        d = self._driver
+        return d is not None and d.is_alive()
+
+    def _driver_loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+            try:
+                made_progress = bool(self.drive(max_batches=1))
+            except Exception as e:    # keep the driver alive: a scheduling
+                # bug must not strand the queue (execution failures are
+                # already converted to FAILED results inside drive)
+                self.driver_errors.append(e)
+                made_progress = False
+            if made_progress:
+                continue
+            with self._lock:
+                if self._stop:
+                    return
+                # Idle.  An empty queue can only change via submit/cancel/
+                # stop — all of which notify — so a long bounded wait is
+                # enough (the bound is a missed-notify backstop).  A
+                # non-empty queue means the next pump turn will make
+                # progress (a batch forms or expiry purges), so only a
+                # short nap to yield the lock.
+                self._cond.wait(0.5 if self.scheduler.pending == 0
+                                else 0.01)
+
+    # -- result waiting ----------------------------------------------------
+    def _wait(self, handle: FoldHandle, timeout: float | None) -> FoldResult:
+        if self.driving:
+            deadline = None if timeout is None else time.monotonic() + timeout
+            with self._lock:
+                while handle._status not in TERMINAL_STATES:
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"request {handle.request_id} still "
+                            f"{handle._status} after {timeout}s")
+                    if not self._cond.wait(remaining):
+                        raise TimeoutError(
+                            f"request {handle.request_id} still "
+                            f"{handle._status} after {timeout}s")
+                return handle._result
+        # threadless mode: pump inline on the caller's thread
+        t0 = time.monotonic()
+        while handle.status not in TERMINAL_STATES:
+            progressed = bool(self.drive(max_batches=1))
+            if handle.status in TERMINAL_STATES:
+                break
+            if not progressed and not self.scheduler.pending:
+                raise RuntimeError(
+                    f"request {handle.request_id} is {handle.status} but the "
+                    f"queue is empty and no driver is running")
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"request {handle.request_id} still {handle.status} "
+                    f"after {timeout}s")
+        return handle._result

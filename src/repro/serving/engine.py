@@ -1,7 +1,13 @@
-"""FoldEngine: bucketed-compilation continuous-batching PPM serving.
+"""EngineCore: bucketed-compilation batch executor for PPM serving.
 
-The engine owns (params, config, scheme) and serves fold requests through
-three cooperating pieces:
+The core owns (params, config, scheme) plus the compiled-executable cache
+and executes ``ScheduledBatch``es; it has no queue and no policy.  Request
+intake, ordering, priorities, deadlines, and cancellation live one layer up
+in ``repro.serving.client.FoldClient``, whose pump loop drives this core.
+``FoldEngine`` (bottom of this module) is the legacy ``submit/step/run``
+surface, kept as a thin compatibility wrapper over a client.
+
+Core responsibilities:
 
   * length buckets — every request is right-padded to its bucket edge, so
     the XLA shape space is the bucket set, not the set of observed lengths;
@@ -9,26 +15,31 @@ three cooperating pieces:
     runs at ONE static batch size (``batch_for_bucket``: token budget,
     max-batch cap, and the admission controller's memory cap), short
     batches are padded with fully-masked dummy rows, so steady-state
-    serving performs zero recompilations.  Buckets at/above the token-wise
-    MHA threshold batch like any other: the chunked path's bias addressing
-    is block-broadcast (protein-major), so the old solo-bucket rule is
-    gone.  Executables are lowered under the engine's kernel backend
-    (``kernels=``, the ``--kernels`` flag): Pallas flash/AAQ kernels or
-    the XLA refs — each served batch records which backend it ran;
-  * the token-budget scheduler + AAQ-aware admission controller
-    (repro.serving.scheduler / .admission) deciding what runs when.
+    serving performs zero recompilations.  Executables are lowered under
+    the core's kernel backend (``kernels=``, the ``--kernels`` flag):
+    Pallas flash/AAQ kernels or the XLA refs — each served batch records
+    which backend it ran;
+  * the AAQ-aware admission controller (repro.serving.admission) pricing
+    every (bucket, batch) candidate in peak activation bytes.
 
 Numerics contract: padding is non-rescaling masking end to end (see
 ``ppm_forward``), so a request served from a padded batch yields coords
 bitwise identical to the same request padded to the same bucket at batch 1
-— which is exactly what the fixed sequential fallback computes.  Fidelity
-(``tm_vs_fp``) re-runs each batch through the cached FP16-baseline
+— which is exactly what the fixed sequential fallback computes, and why the
+client/legacy paths agree bitwise however their batches are composed.
+Fidelity (``tm_vs_fp``) re-runs each batch through the cached FP16-baseline
 executable of the same bucket and TM-scores real-token coords per request.
+
+Clock: ``clock`` (default ``time.monotonic``) stamps batch starts on the
+same monotonic clock the client stamps arrivals/deadlines with, so
+queue_wait_ms can never go negative under NTP adjustment; perf_counter is
+used only for *durations* (compile/run).
 """
 from __future__ import annotations
 
 import time
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -40,19 +51,19 @@ from repro.models.ppm import ppm_forward, tm_score
 from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
 from repro.serving.admission import AdmissionController
 from repro.serving.metrics import EngineMetrics
-from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
-                                     pow2_buckets)
-from repro.serving.types import (REJECTED, FoldRequest, FoldResult,
-                                 pad_to_bucket, strip_padding)
+from repro.serving.scheduler import ScheduledBatch
+from repro.serving.types import (FoldResult, pad_to_bucket, strip_padding)
 
 
-class FoldEngine:
+class EngineCore:
     def __init__(self, params, cfg, scheme: QuantScheme | str | None = None, *,
                  buckets: tuple[int, ...] | None = None,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  mem_budget_mb: float | None = None,
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
-                 keep_distogram: bool = True):
+                 keep_distogram: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.serving.scheduler import pow2_buckets
         self.params = params
         self.cfg = cfg
         if scheme is None:
@@ -65,6 +76,7 @@ class FoldEngine:
         self.max_batch = max_batch
         self.fidelity = fidelity
         self.keep_distogram = keep_distogram
+        self.clock = clock
         if kernels not in dispatch.BACKENDS:
             raise ValueError(f"kernels must be one of {dispatch.BACKENDS}, "
                              f"got {kernels!r}")
@@ -74,18 +86,16 @@ class FoldEngine:
         # token-wise MHA threshold
         self.admission = AdmissionController(cfg, self.scheme, budget,
                                              chunked_len=CHUNKED_ATTN_LEN)
-        self.scheduler = TokenBudgetScheduler(
-            self.buckets, max_tokens_per_batch=max_tokens_per_batch,
-            max_batch=max_batch, admission=self.admission)
         self.metrics = EngineMetrics()
         self._fp_scheme = FP16Baseline()
         self._executables: dict[tuple[int, str], object] = {}
         self._compile_count = 0
-        self._next_id = 0
 
     # -- shape policy -----------------------------------------------------
     def bucket_for(self, length: int) -> int | None:
-        return self.scheduler.bucket_for(length)
+        """Smallest bucket edge holding ``length`` (None = too long)."""
+        from repro.serving.scheduler import bucket_for
+        return bucket_for(self.buckets, length)
 
     def batch_for_bucket(self, bucket: int) -> int:
         """The ONE static batch size this bucket is compiled at."""
@@ -102,7 +112,7 @@ class FoldEngine:
     def _executable(self, bucket: int, scheme: QuantScheme):
         """AOT-compiled forward for (bucket, scheme); cached, counted.
 
-        Lowered under the engine's kernel backend, so a ``kernels='pallas'``
+        Lowered under the core's kernel backend, so a ``kernels='pallas'``
         engine bakes the Pallas flash/AAQ kernels into every bucketed
         executable (interpret mode off-TPU).
         """
@@ -132,49 +142,13 @@ class FoldEngine:
             if self.fidelity:
                 self._executable(bucket, self._fp_scheme)
 
-    # -- request lifecycle ------------------------------------------------
-    def submit(self, seq: np.ndarray | FoldRequest) -> int:
-        if not isinstance(seq, FoldRequest):
-            seq = FoldRequest(self._next_id, np.asarray(seq, np.int32))
-        self._next_id = max(self._next_id, seq.request_id) + 1
-        rej = self.scheduler.submit(seq, time.monotonic())
-        if rej is not None:
-            self.metrics.record(FoldResult(
-                request_id=seq.request_id, length=seq.length,
-                status=REJECTED, reason=rej.reason,
-                bucket=self.bucket_for(seq.length) or 0))
-        return seq.request_id
-
-    def step(self) -> list[FoldResult]:
-        """Serve the next scheduled batch; [] when the queue is empty."""
-        batch = self.scheduler.next_batch()
-        if batch is None or not batch.requests:
-            return []
-        return self._run_batch(batch)
-
-    def drain(self) -> list[FoldResult]:
-        out: list[FoldResult] = []
-        while self.scheduler.pending:
-            out.extend(self.step())
-        return out
-
-    def run(self, seqs, *, reset_metrics: bool = True) -> list[FoldResult]:
-        """Submit a trace, drain it, return results in request order."""
-        if reset_metrics:
-            self.metrics = EngineMetrics()
-        t0 = time.perf_counter()
-        for s in seqs:
-            self.submit(s)
-        self.drain()
-        self.metrics.wall_s = time.perf_counter() - t0
-        return sorted(self.metrics.results, key=lambda r: r.request_id)
-
     # -- execution --------------------------------------------------------
-    def _run_batch(self, batch: ScheduledBatch) -> list[FoldResult]:
+    def execute(self, batch: ScheduledBatch) -> list[FoldResult]:
+        """Run one scheduled batch to FoldResults (recorded in metrics)."""
         bucket = batch.bucket
         static_b = self.batch_for_bucket(bucket)
         est = self.admission.estimate_bytes(bucket, static_b)
-        batch_start = time.monotonic()    # queue wait ends here: compile and
+        batch_start = self.clock()        # queue wait ends here: compile and
         compiled, compile_s = self._executable(bucket, self.scheme)  # run are
         aat, mask = pad_to_bucket([r.aatype for r in batch.requests],  # their
                                   bucket, static_b)                 # own cols
@@ -212,6 +186,7 @@ class FoldEngine:
                 coords=stripped["coords"],
                 distogram=stripped["distogram"],
                 tm_vs_fp=tm,
+                priority=req.priority,
                 queue_wait_ms=(batch_start - req.arrival_time) * 1e3,
                 compile_ms=compile_s * 1e3,
                 run_ms=run_s * 1e3,
@@ -220,3 +195,66 @@ class FoldEngine:
         for r in results:
             self.metrics.record(r)
         return results
+
+
+class FoldEngine:
+    """Legacy blocking surface: ``submit() -> int`` / ``step()`` / ``run()``.
+
+    A thin compatibility wrapper over ``FoldClient`` — every request goes
+    through the same client pump (default priority, no deadline), so the
+    two surfaces are one code path and produce identical results.  New code
+    should use ``repro.serving.client.FoldClient`` directly for handles,
+    priorities, deadlines, cancellation, and progress events.
+    """
+
+    def __init__(self, params, cfg, scheme: QuantScheme | str | None = None, *,
+                 buckets: tuple[int, ...] | None = None,
+                 max_tokens_per_batch: int = 1024, max_batch: int = 8,
+                 mem_budget_mb: float | None = None,
+                 fidelity: bool = False, kernels: str = dispatch.AUTO,
+                 keep_distogram: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.serving.client import FoldClient
+        self.client = FoldClient(
+            params, cfg, scheme, buckets=buckets,
+            max_tokens_per_batch=max_tokens_per_batch, max_batch=max_batch,
+            mem_budget_mb=mem_budget_mb, fidelity=fidelity, kernels=kernels,
+            keep_distogram=keep_distogram, clock=clock)
+        self.core = self.client.core
+
+    # -- delegated state ---------------------------------------------------
+    params = property(lambda self: self.core.params)
+    cfg = property(lambda self: self.core.cfg)
+    scheme = property(lambda self: self.core.scheme)
+    buckets = property(lambda self: self.core.buckets)
+    kernels = property(lambda self: self.core.kernels)
+    fidelity = property(lambda self: self.core.fidelity)
+    admission = property(lambda self: self.core.admission)
+    scheduler = property(lambda self: self.client.scheduler)
+    metrics = property(lambda self: self.core.metrics)
+    compile_count = property(lambda self: self.core.compile_count)
+
+    def bucket_for(self, length: int) -> int | None:
+        return self.core.bucket_for(length)
+
+    def batch_for_bucket(self, bucket: int) -> int:
+        return self.core.batch_for_bucket(bucket)
+
+    def warmup(self) -> None:
+        self.core.warmup()
+
+    # -- legacy request lifecycle -----------------------------------------
+    def submit(self, seq) -> int:
+        """Queue a sequence (or FoldRequest); returns its request id."""
+        return self.client.submit(seq).request_id
+
+    def step(self) -> list[FoldResult]:
+        """Serve the next scheduled batch; [] when the queue is empty."""
+        return self.client.drive(max_batches=1)
+
+    def drain(self) -> list[FoldResult]:
+        return self.client.drive()
+
+    def run(self, seqs, *, reset_metrics: bool = True) -> list[FoldResult]:
+        """Submit a trace, drain it, return results in request order."""
+        return self.client.run(seqs, reset_metrics=reset_metrics)

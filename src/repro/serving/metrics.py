@@ -1,16 +1,40 @@
-"""Serving telemetry: per-request records, per-bucket aggregates, and a
-backend-compile watcher (so tests can assert steady-state = zero recompiles).
+"""Serving telemetry: per-request records, per-bucket aggregates (means AND
+p50/p95/p99 tails for queue wait + run latency), and a backend-compile
+watcher (so tests can assert steady-state = zero recompiles).
 
-Report output is CSV (one row per request) or JSON (records + bucket and
-engine summaries) — the shapes the benchmarks and the serve CLI print.
+Report output is CSV (one row per request; ``save()`` appends ``#``-prefixed
+summary-footer lines with the latency percentiles) or JSON (records + bucket
+and engine summaries, percentiles included) — the shapes the benchmarks and
+the serve CLI print.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import IO
 
-from repro.serving.types import FoldResult
+from repro.serving.types import (CANCELLED, EXPIRED, FAILED, REJECTED,
+                                 FoldResult)
+
+
+def percentiles(values, qs=(50, 95, 99)) -> dict[str, float]:
+    """Linear-interpolated percentiles as {"p50": ..., ...}; zeros when
+    empty so report shapes are stable."""
+    if not values:
+        return {f"p{q}": 0.0 for q in qs}
+    s = sorted(values)
+    out = {}
+    for q in qs:
+        k = (len(s) - 1) * q / 100.0
+        lo, hi = math.floor(k), math.ceil(k)
+        out[f"p{q}"] = s[lo] if lo == hi else s[lo] + (s[hi] - s[lo]) * (k - lo)
+    return out
+
+
+def _latency_summary(values) -> dict[str, float]:
+    mean = sum(values) / len(values) if values else 0.0
+    return {"mean": mean, **percentiles(values)}
 
 # -- compile watcher --------------------------------------------------------
 # jax.monitoring emits '/jax/core/compile/backend_compile_duration' once per
@@ -60,10 +84,13 @@ class BucketStats:
     bucket: int
     requests: int = 0
     rejected: int = 0
+    cancelled: int = 0
+    expired: int = 0
+    failed: int = 0
     tokens_real: int = 0
     tokens_padded: int = 0
-    queue_wait_ms: float = 0.0
-    run_ms: float = 0.0
+    wait_samples: list = dataclasses.field(default_factory=list)
+    run_samples: list = dataclasses.field(default_factory=list)
     compile_ms: float = 0.0
     compiles: int = 0
 
@@ -74,83 +101,126 @@ class BucketStats:
         return 1.0 - self.tokens_real / self.tokens_padded
 
     def as_dict(self) -> dict:
-        served = max(self.requests - self.rejected, 1)
+        wait = _latency_summary(self.wait_samples)
+        run = _latency_summary(self.run_samples)
         return {
             "bucket": self.bucket, "requests": self.requests,
-            "rejected": self.rejected,
-            "mean_queue_wait_ms": self.queue_wait_ms / served,
-            "mean_run_ms": self.run_ms / served,
+            "rejected": self.rejected, "cancelled": self.cancelled,
+            "expired": self.expired, "failed": self.failed,
+            "mean_queue_wait_ms": wait["mean"],
+            "mean_run_ms": run["mean"],
+            "queue_wait_ms": wait, "run_ms": run,
             "compile_ms": self.compile_ms, "compiles": self.compiles,
             "padding_waste": self.padding_waste,
         }
 
 
-CSV_HEADER = ("request,len,bucket,batch,status,queue_ms,compile_ms,run_ms,"
-              "tm_vs_fp,padding_frac,est_act_mb,kernel_backend")
+CSV_HEADER = ("request,len,bucket,batch,status,priority,queue_ms,compile_ms,"
+              "run_ms,tm_vs_fp,padding_frac,est_act_mb,kernel_backend")
 
 
 def csv_row(r: FoldResult) -> str:
     tm = "" if r.tm_vs_fp is None else f"{r.tm_vs_fp:.4f}"
     return (f"{r.request_id},{r.length},{r.bucket},{r.batch_size},{r.status},"
+            f"{r.priority},"
             f"{r.queue_wait_ms:.1f},{r.compile_ms:.1f},{r.run_ms:.1f},{tm},"
             f"{r.padding_frac:.3f},{r.est_activation_bytes / 1e6:.1f},"
             f"{r.kernel_backend}")
 
 
 class EngineMetrics:
+    """Aggregates are guarded by an internal lock: the background driver
+    records batch results off the client lock while cancel/expire/reject
+    paths record under it — without this, concurrent ``+=`` on bucket
+    counters would lose updates in thread-driver mode."""
+
     def __init__(self):
+        import threading
         self.results: list[FoldResult] = []
         self._buckets: dict[int, BucketStats] = {}
         self.wall_s: float = 0.0
+        self._lock = threading.Lock()
 
     def record(self, r: FoldResult) -> None:
-        self.results.append(r)
-        st = self._buckets.setdefault(r.bucket, BucketStats(r.bucket))
-        st.requests += 1
-        if not r.ok:
-            st.rejected += 1
-            return
-        st.tokens_real += r.length
-        st.tokens_padded += r.bucket
-        st.queue_wait_ms += r.queue_wait_ms
-        st.run_ms += r.run_ms
-        # per-bucket compile_ms accrues once per compilation (record_compile),
-        # NOT per request — every request in a batch carries the same
-        # FoldResult.compile_ms, summing those would multiply by batch size
+        with self._lock:
+            self.results.append(r)
+            st = self._buckets.setdefault(r.bucket, BucketStats(r.bucket))
+            st.requests += 1
+            if not r.ok:
+                if r.status == REJECTED:
+                    st.rejected += 1
+                elif r.status == CANCELLED:
+                    st.cancelled += 1
+                elif r.status == EXPIRED:
+                    st.expired += 1
+                elif r.status == FAILED:
+                    st.failed += 1
+                return
+            st.tokens_real += r.length
+            st.tokens_padded += r.bucket
+            st.wait_samples.append(r.queue_wait_ms)
+            st.run_samples.append(r.run_ms)
+            # per-bucket compile_ms accrues once per compilation
+            # (record_compile), NOT per request — every request in a batch
+            # carries the same FoldResult.compile_ms, summing those would
+            # multiply by batch size
 
     def record_compile(self, bucket: int, ms: float) -> None:
-        st = self._buckets.setdefault(bucket, BucketStats(bucket))
-        st.compiles += 1
-        st.compile_ms += ms
+        with self._lock:
+            st = self._buckets.setdefault(bucket, BucketStats(bucket))
+            st.compiles += 1
+            st.compile_ms += ms
 
     def summary(self) -> dict:
-        served = [r for r in self.results if r.ok]
+        with self._lock:       # one consistent snapshot: a racing record()
+            # could otherwise resize _buckets mid-iteration
+            results = list(self.results)
+            compiles = sum(b.compiles for b in self._buckets.values())
+            bucket_dicts = [self._buckets[b].as_dict()
+                            for b in sorted(self._buckets)]
+        served = [r for r in results if r.ok]
         tokens = sum(r.length for r in served)
+        by_status = {s: sum(1 for r in results if r.status == s)
+                     for s in (REJECTED, CANCELLED, EXPIRED, FAILED)}
         out = {
-            "requests": len(self.results),
+            "requests": len(results),
             "served": len(served),
-            "rejected": len(self.results) - len(served),
+            "rejected": by_status[REJECTED],
+            "cancelled": by_status[CANCELLED],
+            "expired": by_status[EXPIRED],
+            "failed": by_status[FAILED],
             "tokens": tokens,
             "wall_s": self.wall_s,
             "requests_per_s": len(served) / self.wall_s if self.wall_s else 0.0,
             "tokens_per_s": tokens / self.wall_s if self.wall_s else 0.0,
-            "compiles": sum(b.compiles for b in self._buckets.values()),
+            "compiles": compiles,
+            "queue_wait_ms": _latency_summary(
+                [r.queue_wait_ms for r in served]),
+            "run_ms": _latency_summary([r.run_ms for r in served]),
             "max_est_act_mb": max(
                 (r.est_activation_bytes for r in served), default=0) / 1e6,
-            "buckets": [self._buckets[b].as_dict()
-                        for b in sorted(self._buckets)],
+            "buckets": bucket_dicts,
         }
         return out
 
     # -- reports ----------------------------------------------------------
-    def write_csv(self, fh: IO[str]) -> None:
+    def write_csv(self, fh: IO[str], *, summary_footer: bool = False) -> None:
+        with self._lock:
+            results = list(self.results)
         fh.write(CSV_HEADER + "\n")
-        for r in self.results:
+        for r in results:
             fh.write(csv_row(r) + "\n")
+        if summary_footer:
+            s = self.summary()
+            for key in ("queue_wait_ms", "run_ms"):
+                row = " ".join(f"{k}={v:.1f}" for k, v in s[key].items())
+                fh.write(f"# {key} {row}\n")
 
     def write_json(self, fh: IO[str]) -> None:
+        with self._lock:
+            results = list(self.results)
         json.dump({"summary": self.summary(),
-                   "requests": [self._req_dict(r) for r in self.results]},
+                   "requests": [self._req_dict(r) for r in results]},
                   fh, indent=2)
 
     @staticmethod
@@ -158,7 +228,7 @@ class EngineMetrics:
         return {
             "request_id": r.request_id, "length": r.length,
             "bucket": r.bucket, "batch_size": r.batch_size,
-            "status": r.status, "reason": r.reason,
+            "status": r.status, "reason": r.reason, "priority": r.priority,
             "queue_wait_ms": r.queue_wait_ms, "compile_ms": r.compile_ms,
             "run_ms": r.run_ms, "tm_vs_fp": r.tm_vs_fp,
             "padding_frac": r.padding_frac,
@@ -171,4 +241,4 @@ class EngineMetrics:
             if path.endswith(".json"):
                 self.write_json(fh)
             else:
-                self.write_csv(fh)
+                self.write_csv(fh, summary_footer=True)

@@ -1,15 +1,33 @@
-"""Token-budget continuous batching over length buckets (ESMFold-style).
+"""Priority-aware token-budget continuous batching over length buckets.
 
 Requests queue per length bucket.  ``next_batch`` drains the bucket holding
-the oldest waiting request (FCFS across buckets, arrival order within one)
-and grows the batch while every constraint holds:
+the most urgent waiting request — urgency is ``(-priority, arrival_time,
+request_id)``, so priority tiers strictly dominate and ties fall back to
+FCFS (with every request at the default priority 0 this is exactly the old
+oldest-request-first behavior) — and grows the batch, most urgent first,
+while every constraint holds:
 
   * padded tokens ``(n+1) * bucket <= max_tokens_per_batch``
   * ``n + 1 <= max_batch``
   * the admission controller prices the grown batch under the memory
     budget; a growth that would bust the budget stops the batch (the rest
-    of the queue is *deferred* to the next batch), and a request whose
-    bucket busts the budget even at batch 1 is *rejected*.
+    of the queue is *deferred* to the next batch — the deferred request ids
+    ride on ``ScheduledBatch.deferred`` so the client can surface DEFERRED
+    events), and a request whose bucket busts the budget even at batch 1 is
+    *rejected*.
+
+Priority inversion is structurally impossible past one batch: a queued
+high-priority request makes its bucket win ``next_batch`` regardless of how
+many low-priority requests sit in other buckets, and within a bucket it is
+picked into the batch before any lower tier.
+
+Request lifecycle hooks (used by the FoldClient pump):
+
+  * ``cancel(request_id)`` removes a still-queued request (False once it
+    left the queue — it is in a batch or already terminal);
+  * ``purge_expired(now)`` removes and returns every queued request whose
+    deadline has passed.  ``now`` must come from the same monotonic clock
+    that stamped ``arrival_time``/``deadline_at`` at submit.
 
 Continuous batching: ``submit`` may be called at any time, including
 between ``next_batch`` calls — newly arrived requests join the next batch
@@ -48,11 +66,28 @@ def parse_buckets(spec: str, min_len: int, max_len: int) -> tuple[int, ...]:
     return edges
 
 
+def bucket_for(buckets: tuple[int, ...], length: int) -> int | None:
+    """Smallest bucket edge holding ``length`` (None = too long).  The ONE
+    shape-policy rule — the scheduler and the engine core both call this,
+    so queued-under and reported buckets can never diverge."""
+    for edge in buckets:
+        if length <= edge:
+            return edge
+    return None
+
+
+def _urgency(r: FoldRequest) -> tuple[float, float, int]:
+    """Batch-formation order: priority tier, then FCFS, then id."""
+    return (-r.priority, r.arrival_time, r.request_id)
+
+
 @dataclasses.dataclass(frozen=True)
 class ScheduledBatch:
     bucket: int
     requests: tuple[FoldRequest, ...]
     est_bytes: int
+    deferred: tuple[int, ...] = ()     # request ids left queued because
+                                       # admission stopped this batch's growth
 
     @property
     def batch_size(self) -> int:
@@ -80,15 +115,17 @@ class TokenBudgetScheduler:
 
     # -- intake -----------------------------------------------------------
     def bucket_for(self, length: int) -> int | None:
-        """Smallest bucket edge holding ``length`` (None = too long)."""
-        for edge in self.buckets:
-            if length <= edge:
-                return edge
-        return None
+        return bucket_for(self.buckets, length)
 
     def submit(self, req: FoldRequest, now: float) -> Rejection | None:
-        """Queue a request; returns a Rejection if it can never be served."""
+        """Queue a request; returns a Rejection if it can never be served.
+
+        ``now`` stamps ``arrival_time`` and anchors the absolute deadline —
+        it must be the client's monotonic clock, never wall time.
+        """
         req.arrival_time = now
+        if req.deadline_s is not None:
+            req.deadline_at = now + req.deadline_s
         bucket = self.bucket_for(req.length)
         if bucket is None:
             return Rejection(req, f"length {req.length} exceeds max bucket "
@@ -104,34 +141,65 @@ class TokenBudgetScheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    # -- batch formation --------------------------------------------------
-    def _oldest_bucket(self) -> int | None:
-        best, best_t = None, None
+    # -- lifecycle purging ------------------------------------------------
+    def cancel(self, request_id: int) -> bool:
+        """Remove a still-queued request; False once it left the queue."""
+        for q in self._queues.values():
+            for r in q:
+                if r.request_id == request_id:
+                    q.remove(r)
+                    return True
+        return False
+
+    def purge_expired(self, now: float) -> list[FoldRequest]:
+        """Drop and return queued requests whose deadline passed at ``now``."""
+        expired: list[FoldRequest] = []
         for bucket, q in self._queues.items():
-            if q and (best_t is None or q[0].arrival_time < best_t):
-                best, best_t = bucket, q[0].arrival_time
+            alive: deque[FoldRequest] = deque()
+            for r in q:
+                (expired if r.expired(now) else alive).append(r)
+            self._queues[bucket] = alive
+        return expired
+
+    # -- batch formation --------------------------------------------------
+    def _best_bucket(self) -> int | None:
+        best, best_key = None, None
+        for bucket, q in self._queues.items():
+            if not q:
+                continue
+            key = min(_urgency(r) for r in q)
+            if best_key is None or key < best_key:
+                best, best_key = bucket, key
         return best
 
-    def _may_grow(self, bucket: int, n: int) -> bool:
-        """Can the batch grow from n to n+1 requests?"""
+    def _grow_stop(self, bucket: int, n: int) -> str | None:
+        """Why the batch cannot grow from n to n+1 (None = may grow)."""
         if n >= self.max_batch:
-            return False
+            return "max_batch"
         if (n + 1) * bucket > self.max_tokens_per_batch and n >= 1:
-            return False          # always admit at least one (ESMFold rule)
-        if self.admission is not None:
+            return "token_budget"  # always admit at least one (ESMFold rule)
+        if self.admission is not None and n >= 1:
+            # a solo request over budget was vetted at submit; growth over
+            # budget defers the remainder of the queue to a later batch
             if self.admission.admit(bucket, n + 1).verdict != ADMIT:
-                return n < 1      # solo request over budget was vetted at
-                                  # submit; growth over budget just stops
-        return True
+                return "admission"
+        return None
 
     def next_batch(self) -> ScheduledBatch | None:
-        bucket = self._oldest_bucket()
+        bucket = self._best_bucket()
         if bucket is None:
             return None
-        q = self._queues[bucket]
+        q = sorted(self._queues[bucket], key=_urgency)
         picked: list[FoldRequest] = []
-        while q and self._may_grow(bucket, len(picked)):
-            picked.append(q.popleft())
+        stop = None
+        while q:
+            stop = self._grow_stop(bucket, len(picked))
+            if stop is not None:
+                break
+            picked.append(q.pop(0))
+        self._queues[bucket] = deque(q)
         est = (self.admission.estimate_bytes(bucket, len(picked))
                if self.admission is not None else 0)
-        return ScheduledBatch(bucket, tuple(picked), est)
+        deferred = (tuple(r.request_id for r in q)
+                    if stop == "admission" else ())
+        return ScheduledBatch(bucket, tuple(picked), est, deferred)

@@ -1,8 +1,15 @@
 """Request/response types for the fold-serving engine.
 
-A ``FoldRequest`` is an amino-acid sequence; a ``FoldResult`` carries the
+A ``FoldRequest`` is an amino-acid sequence plus its scheduling attributes
+(priority tier, optional deadline); a ``FoldResult`` carries the
 masked-length-stripped outputs (coords/distogram only over real tokens) plus
 the per-request serving telemetry the metrics module aggregates.
+
+Clock contract: every request-lifecycle timestamp (``arrival_time``,
+``deadline_at``, batch-start times, event timestamps) comes from ONE
+monotonic clock — ``time.monotonic`` by default, injectable on the client
+for tests.  Wall-clock ``time.time()`` is never used: an NTP step between
+submit and batch start would make queue_wait_ms negative.
 """
 from __future__ import annotations
 
@@ -11,37 +18,51 @@ from typing import Any
 
 import numpy as np
 
-REJECTED = "rejected"
 OK = "ok"
+REJECTED = "rejected"
+CANCELLED = "cancelled"
+EXPIRED = "expired"
+FAILED = "failed"          # batch execution raised; request is terminal
+TERMINAL_STATUSES = (OK, REJECTED, CANCELLED, EXPIRED, FAILED)
 
 
 @dataclasses.dataclass
 class FoldRequest:
     request_id: int
     aatype: np.ndarray                 # (L,) int32 amino-acid ids
-    arrival_time: float = 0.0          # engine clock, set on submit
+    arrival_time: float = 0.0          # client clock, set on submit
+    priority: int = 0                  # larger = more urgent; ties are FCFS
+    deadline_s: float | None = None    # relative budget from submit
+    deadline_at: float | None = None   # absolute, client clock; set on submit
+    cancelled: bool = False            # set by FoldHandle.cancel()
 
     def __post_init__(self):
         self.aatype = np.asarray(self.aatype, np.int32)
         if self.aatype.ndim != 1:
             raise ValueError(f"aatype must be 1-D, got {self.aatype.shape}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {self.deadline_s}")
 
     @property
     def length(self) -> int:
         return int(self.aatype.shape[0])
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_at is not None and now >= self.deadline_at
 
 
 @dataclasses.dataclass
 class FoldResult:
     request_id: int
     length: int
-    status: str = OK                   # OK | REJECTED
+    status: str = OK           # OK | REJECTED | CANCELLED | EXPIRED | FAILED
     reason: str = ""
     bucket: int = 0
     batch_size: int = 0
     coords: np.ndarray | None = None           # (L, 3) — padding stripped
     distogram: np.ndarray | None = None        # (L, L, bins) — stripped
     tm_vs_fp: float | None = None              # fidelity vs FP16 reference
+    priority: int = 0
     queue_wait_ms: float = 0.0
     compile_ms: float = 0.0            # 0 on executable-cache hits
     run_ms: float = 0.0

@@ -1,0 +1,383 @@
+"""Request-lifecycle client tests: FoldHandle state machine, priorities,
+deadlines, cancellation, the typed event stream, and the acceptance
+scenario — a mixed-priority trace with one cancellation and one expired
+deadline whose completed coords must be bitwise identical to the legacy
+``FoldEngine.run`` path.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduce_ppm_config
+from repro.core import make_scheme
+from repro.models.ppm import init_ppm
+from repro.serving import (AdmissionController, FoldClient, FoldEngine,
+                           FoldRequest, LEGAL_TRANSITIONS,
+                           check_request_order)
+from repro.serving import events as ev
+from repro.serving.client import (ADMITTED, CANCELLED, DONE, EXPIRED, QUEUED,
+                                  RUNNING, TERMINAL_STATES)
+
+CFG = reduce_ppm_config()
+PARAMS = init_ppm(jax.random.PRNGKey(0), CFG)
+SCHEME = make_scheme("lightnobel_aaq")
+RNG = np.random.default_rng(13)
+
+
+def _seq(length: int) -> np.ndarray:
+    return RNG.integers(0, 20, length).astype(np.int32)
+
+
+class ManualClock:
+    """Deterministic monotonic clock for scripting deadline expiry."""
+
+    def __init__(self, t: float = 1000.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _client(**kw) -> FoldClient:
+    kw.setdefault("buckets", (32,))
+    kw.setdefault("max_tokens_per_batch", 64)
+    kw.setdefault("max_batch", 2)
+    return FoldClient(PARAMS, CFG, SCHEME, **kw)
+
+
+def _assert_legal(handle) -> None:
+    states = [s for s, _ in handle.transitions]
+    for a, b in zip(states, states[1:]):
+        assert b in LEGAL_TRANSITIONS[a], \
+            f"illegal transition {a} -> {b} for {handle}"
+
+
+# --------------------------------------------------------------------------
+# handle basics
+# --------------------------------------------------------------------------
+def test_submit_returns_live_handle_and_result_pumps_inline():
+    client = _client()
+    h = client.submit(_seq(20), priority=3)
+    assert h.status == QUEUED and not h.done
+    assert h.priority == 3 and h.deadline_s is None
+    r = h.result()                      # threadless: pumps on this thread
+    assert h.status == DONE and h.done
+    assert r.ok and r.coords.shape == (20, 3) and r.priority == 3
+    assert [s for s, _ in h.transitions] == [QUEUED, ADMITTED, RUNNING, DONE]
+    # result() is idempotent once terminal
+    assert h.result(timeout=0.0) is r
+
+
+def test_rejected_at_submit_is_terminal_handle_state():
+    client = _client(buckets=(32,))
+    h = client.submit(_seq(60))                    # longer than max bucket
+    assert h.status == "REJECTED" and h.done
+    r = h.result()
+    assert r.status == "rejected" and "exceeds max bucket" in r.reason
+    assert h.cancel() is False                     # terminal: cannot cancel
+    evs = [e.kind for e in client.events.stream().events()]
+    assert evs == []                               # stream attached late
+    # lifecycle recorded in metrics
+    assert client.metrics.summary()["rejected"] == 1
+
+
+def test_illegal_transition_raises():
+    client = _client()
+    h = client.submit(_seq(20))
+    with pytest.raises(RuntimeError, match="illegal handle transition"):
+        h._advance(DONE, 0.0)
+
+
+# --------------------------------------------------------------------------
+# cancellation before admission
+# --------------------------------------------------------------------------
+def test_cancellation_before_admission():
+    client = _client(max_batch=2)
+    stream = client.stream()
+    keep = client.submit(_seq(20))
+    victim = client.submit(_seq(24))
+    assert victim.cancel() is True
+    assert victim.status == CANCELLED and victim.done
+    assert victim.cancel() is False                # second call is a no-op
+    res = victim.result()
+    assert res.status == "cancelled" and res.coords is None
+
+    done = client.drive()
+    # the cancelled request never occupied a batch slot
+    assert keep.status == DONE
+    assert all(r.request_id != victim.request_id for r in done)
+    assert keep.result().batch_size == 1
+    evs = stream.events()
+    victim_evs = [e.kind for e in evs if e.request_id == victim.request_id]
+    assert victim_evs == [ev.SUBMITTED, ev.CANCELLED]
+    assert not any(e.kind in (ev.SCHEDULED, ev.BATCH_START)
+                   and e.request_id == victim.request_id for e in evs)
+    s = client.metrics.summary()
+    assert s["cancelled"] == 1 and s["served"] == 1
+
+
+def test_cancel_after_completion_fails():
+    client = _client()
+    h = client.submit(_seq(20))
+    client.drive()
+    assert h.status == DONE and h.cancel() is False
+
+
+def test_duplicate_live_request_id_rejected_eagerly():
+    client = _client()
+    client.submit(FoldRequest(5, _seq(20)))
+    with pytest.raises(ValueError, match="already live"):
+        client.submit(FoldRequest(5, _seq(24)))
+    with pytest.raises(ValueError, match="conflict"):
+        client.submit(FoldRequest(6, _seq(20)), priority=2)
+
+
+def test_failed_batch_terminates_handles_not_hangs():
+    """An execution error must surface as a terminal FAILED result, never
+    as handles stuck in RUNNING."""
+    client = _client()
+    h1 = client.submit(_seq(20))
+    h2 = client.submit(_seq(24))
+
+    def boom(batch):
+        raise RuntimeError("XLA fell over")
+    client.core.execute = boom
+    done = client.drive()
+    assert h1.status == DONE and h2.status == DONE
+    for h in (h1, h2):
+        r = h.result()
+        assert r.status == "failed" and "XLA fell over" in r.reason
+        _assert_legal(h)
+    assert client.metrics.summary()["failed"] == 2
+    assert len(done) == 2 and client.pending == 0
+
+
+# --------------------------------------------------------------------------
+# deadline expiry mid-queue
+# --------------------------------------------------------------------------
+def test_deadline_expiry_mid_queue():
+    clock = ManualClock()
+    client = _client(max_tokens_per_batch=32, max_batch=1, clock=clock)
+    ahead = client.submit(_seq(20))                      # no deadline
+    doomed = client.submit(_seq(24), deadline_s=5.0)     # will expire queued
+    assert doomed.status == QUEUED
+    clock.advance(10.0)                                  # past the deadline
+    done = client.drive()
+    assert ahead.status == DONE
+    assert doomed.status == EXPIRED and doomed.done
+    r = doomed.result()
+    assert r.status == "expired" and "deadline" in r.reason
+    assert r.queue_wait_ms == pytest.approx(10_000.0)
+    # expired requests never occupy batch slots
+    assert all(res.request_id != doomed.request_id or res.status == "expired"
+               for res in done)
+    assert client.metrics.summary()["expired"] == 1
+    _assert_legal(doomed)
+
+
+def test_deadline_not_reached_runs_normally():
+    clock = ManualClock()
+    client = _client(clock=clock)
+    h = client.submit(_seq(20), deadline_s=60.0)
+    clock.advance(1.0)                                   # well inside
+    client.drive()
+    assert h.status == DONE and h.result().ok
+
+
+def test_bad_deadline_rejected_eagerly():
+    with pytest.raises(ValueError, match="deadline_s"):
+        FoldRequest(0, _seq(8), deadline_s=-1.0)
+
+
+# --------------------------------------------------------------------------
+# priorities
+# --------------------------------------------------------------------------
+def test_priority_inversion_blocked_by_tiers():
+    """A low-priority long request submitted FIRST must not run before a
+    high-priority short one past the token budget."""
+    clock = ManualClock()
+    client = _client(buckets=(32, 64), max_tokens_per_batch=64,
+                     max_batch=2, clock=clock)
+    long_low = client.submit(_seq(50), priority=0)       # bucket 64, oldest
+    clock.advance(1.0)
+    short_low = client.submit(_seq(20), priority=0)      # bucket 32
+    clock.advance(1.0)
+    short_high = client.submit(_seq(24), priority=1)     # bucket 32, newest
+    stream = client.stream()
+    client.drive()
+    assert all(h.status == DONE for h in (long_low, short_low, short_high))
+
+    evs = stream.events()
+    start_seq = {e.request_id: e.seq for e in evs if e.kind == ev.BATCH_START}
+    # priority tier dominates FCFS: the high-priority request's batch starts
+    # before the older low-priority long request's batch
+    assert start_seq[short_high.request_id] < start_seq[long_low.request_id]
+    # and within its bucket the high-priority request leads the batch
+    sched = [e for e in evs if e.kind == ev.SCHEDULED]
+    first_batch = [e.request_id for e in sched
+                   if e.data["bucket"] == 32]
+    assert first_batch[0] == short_high.request_id
+
+
+def test_equal_priorities_preserve_fcfs():
+    clock = ManualClock()
+    client = _client(buckets=(32, 64), max_tokens_per_batch=512,
+                     clock=clock)
+    a = client.submit(_seq(50))                          # bucket 64, oldest
+    clock.advance(1.0)
+    b = client.submit(_seq(20))                          # bucket 32
+    stream = client.stream()
+    client.drive()
+    starts = [e.request_id for e in stream.events()
+              if e.kind == ev.BATCH_START]
+    assert starts.index(a.request_id) < starts.index(b.request_id)
+
+
+# --------------------------------------------------------------------------
+# admission -> lifecycle surfacing
+# --------------------------------------------------------------------------
+def test_admission_deferral_emits_event_and_request_still_served():
+    one = AdmissionController(CFG, SCHEME).estimate_bytes(32, 1)
+    client = _client(max_tokens_per_batch=512, max_batch=4,
+                     mem_budget_mb=one / 1e6)            # batch 2 over budget
+    stream = client.stream()
+    h1 = client.submit(_seq(20))
+    h2 = client.submit(_seq(24))
+    client.drive()
+    assert h1.status == DONE and h2.status == DONE
+    evs = stream.events()
+    deferred = [e for e in evs if e.kind == ev.DEFERRED]
+    assert [e.request_id for e in deferred] == [h2.request_id]
+    assert deferred[0].data["verdict"] == "defer"
+    assert deferred[0].data["est_mb"] > deferred[0].data["budget_mb"]
+    # both ran solo under the budget
+    assert h1.result().batch_size == 1 and h2.result().batch_size == 1
+
+
+def test_admission_rejection_is_handle_state():
+    one = AdmissionController(CFG, SCHEME).estimate_bytes(64, 1)
+    client = _client(buckets=(32, 64), max_tokens_per_batch=256,
+                     mem_budget_mb=(one - 1) / 1e6)
+    h = client.submit(_seq(50))                          # bucket 64: too big
+    assert h.status == "REJECTED"
+    assert "budget" in h.result().reason
+
+
+# --------------------------------------------------------------------------
+# event stream plumbing
+# --------------------------------------------------------------------------
+def test_subscribe_callback_and_stream_agree():
+    client = _client()
+    seen: list = []
+    unsubscribe = client.subscribe(lambda e: seen.append(e))
+    stream = client.stream()
+    h = client.submit(_seq(20))
+    client.drive()
+    pulled = stream.events()
+    assert [e.seq for e in seen] == [e.seq for e in pulled]
+    assert [e.kind for e in pulled] == [
+        ev.SUBMITTED, ev.SCHEDULED, ev.BATCH_START, ev.BATCH_DONE,
+        ev.COMPLETED]
+    seqs = [e.seq for e in pulled]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    unsubscribe()
+    client.submit(_seq(20))
+    assert len(seen) == 5                        # nothing after unsubscribe
+    check_request_order([e for e in pulled if e.request_id == h.request_id])
+
+
+def test_background_driver_serves_and_stops():
+    client = _client()
+    client.start()
+    assert client.driving
+    handles = [client.submit(_seq(ln)) for ln in (20, 24, 28)]
+    results = [h.result(timeout=600.0) for h in handles]
+    assert all(r.ok for r in results)
+    client.stop()
+    assert not client.driving
+    for h in handles:
+        _assert_legal(h)
+        assert h.status == DONE
+
+
+# --------------------------------------------------------------------------
+# the acceptance scenario
+# --------------------------------------------------------------------------
+def test_lifecycle_scenario_mixed_priorities_cancel_expiry_bitwise():
+    """≥8 mixed-length requests, two priority tiers, one cancellation, one
+    expired deadline: legal transitions only, cancelled/expired never occupy
+    batch slots, per-request event order holds, and completed coords are
+    bitwise identical to the legacy FoldEngine.run() path."""
+    lens = [20, 31, 45, 17, 50, 25, 40, 28]
+    tiers = [0, 1, 0, 1, 0, 1, 0, 1]
+    seqs = [_seq(ln) for ln in lens]
+
+    clock = ManualClock()
+    client = FoldClient(PARAMS, CFG, SCHEME, buckets=(32, 64),
+                        max_tokens_per_batch=128, max_batch=2, clock=clock)
+    stream = client.stream()
+    handles = []
+    for i, (s, p) in enumerate(zip(seqs, tiers)):
+        # request 4 carries the deadline that will expire while queued
+        deadline = 5.0 if i == 4 else None
+        handles.append(client.submit(s, priority=p, deadline_s=deadline))
+        clock.advance(0.25)
+    # request 2 is cancelled before anything is driven
+    assert handles[2].cancel() is True
+    clock.advance(10.0)                  # request 4's deadline passes queued
+    client.drive()
+
+    cancelled, expired = handles[2], handles[4]
+    completed = [h for i, h in enumerate(handles) if i not in (2, 4)]
+
+    # 1. handles traverse legal state transitions only
+    for h in handles:
+        _assert_legal(h)
+    assert cancelled.status == CANCELLED
+    assert expired.status == EXPIRED
+    assert all(h.status == DONE for h in completed)
+
+    # 2. cancelled/expired requests never occupy batch slots
+    evs = stream.events()
+    batched_ids = {e.request_id for e in evs
+                   if e.kind in (ev.SCHEDULED, ev.BATCH_START)}
+    assert cancelled.request_id not in batched_ids
+    assert expired.request_id not in batched_ids
+    for e in evs:
+        if e.kind == ev.BATCH_START:
+            assert cancelled.request_id not in e.data["batch"]
+            assert expired.request_id not in e.data["batch"]
+
+    # 3. event-stream ordering is consistent per request
+    for h in handles:
+        check_request_order([e for e in evs
+                             if e.request_id == h.request_id])
+    seq_nums = [e.seq for e in evs]
+    assert seq_nums == sorted(seq_nums)
+
+    # high priority beats low within each bucket's first batch
+    first32 = next(e for e in evs
+                   if e.kind == ev.SCHEDULED and e.data["bucket"] == 32)
+    assert handles[first32.request_id].priority == 1
+
+    # 4. completed coords bitwise-match the legacy FoldEngine.run() path
+    legacy = FoldEngine(PARAMS, CFG, SCHEME, buckets=(32, 64),
+                        max_tokens_per_batch=128, max_batch=2)
+    legacy_results = {r.request_id: r for r in legacy.run(seqs)}
+    for h in completed:
+        got = h.result()
+        ref = legacy_results[h.request_id]
+        assert ref.ok
+        np.testing.assert_array_equal(got.coords, ref.coords)
+        np.testing.assert_array_equal(got.distogram, ref.distogram)
+
+    # bookkeeping: summary splits the terminal states
+    s = client.metrics.summary()
+    assert s["served"] == 6 and s["cancelled"] == 1 and s["expired"] == 1
+    assert s["rejected"] == 0
+    assert s["queue_wait_ms"]["p99"] >= s["queue_wait_ms"]["p50"] >= 0.0
