@@ -32,8 +32,8 @@ from repro.data.pipeline import ProteinSampler
 from repro.kernels import dispatch
 from repro.launch.serve import priority_tiers
 from repro.models.ppm import init_ppm, ppm_forward
-from repro.serving import (EngineMetrics, FoldEngine, pad_to_bucket,
-                           parse_buckets)
+from repro.serving import (EngineMetrics, FoldEngine, make_serving_mesh,
+                           pad_to_bucket, parse_buckets)
 
 
 def _trace(n: int, min_len: int, max_len: int):
@@ -85,6 +85,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--max-tokens-per-batch", type=int, default=512)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--mem-budget-mb", type=float, default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="'DxM' serving mesh; shards buckets >= "
+                         "--shard-threshold over the model axis")
+    ap.add_argument("--shard-threshold", type=int, default=None)
     ap.add_argument("--priority-split", type=float, default=0.25)
     ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
@@ -115,11 +119,16 @@ def main(argv=None) -> dict:
     emit("serving.sequential.warm", seq_warm * 1e6,
          f"{len(seqs) / seq_warm:.2f}req/s {tokens / seq_warm:.1f}tok/s")
 
+    if (args.mesh is None) != (args.shard_threshold is None):
+        raise SystemExit("--mesh and --shard-threshold must be given "
+                         "together (one without the other shards nothing)")
+    mesh = make_serving_mesh(args.mesh)
     engine = FoldEngine(params, cfg, args.scheme, buckets=buckets,
                         max_tokens_per_batch=args.max_tokens_per_batch,
                         max_batch=args.max_batch,
                         mem_budget_mb=args.mem_budget_mb, fidelity=False,
-                        kernels=args.kernels)
+                        kernels=args.kernels, mesh=mesh,
+                        shard_threshold=args.shard_threshold)
     eng_cold, _ = bench_engine(engine, seqs)
     compiles_after_cold = engine.compile_count
     eng_warm, results = bench_engine(engine, seqs)
@@ -164,6 +173,9 @@ def main(argv=None) -> dict:
         "n_requests": len(seqs),
         "tokens": tokens,
         "kernels": backend,
+        "mesh": args.mesh,
+        "shard_threshold": args.shard_threshold,
+        "placements": sorted({r.placement for r in served}),
         "priority_split": args.priority_split,
         "deadline_s": args.deadline_s,
         "sequential": {"warm_s": seq_warm,

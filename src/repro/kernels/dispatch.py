@@ -126,25 +126,39 @@ def attention_is_pallas(sq: int, skv: int, *, backend: str | None = None) -> boo
     return resolve_attention(sq, skv, backend=backend) == PALLAS
 
 
-def describe(backend: str | None = None, *, seq: int | None = None) -> str:
+def describe(backend: str | None = None, *, seq: int | None = None,
+             qmm_tokens: int | None = None) -> str:
     """Stable human/report label for the backend a mode resolves to.
 
-    For ``auto`` the label is capability-only unless ``seq`` is given — a
-    representative attention length (e.g. the serving bucket) — in which
-    case the shape floors are folded in, so an on-TPU bucket below
-    MIN_FLASH_SEQ is honestly reported as ``auto:ref``.
+    For ``auto`` the label is capability-only unless shape hints are given,
+    in which case BOTH per-op floors are folded in: ``seq`` (a
+    representative attention length, e.g. the serving bucket) resolves the
+    flash path against MIN_FLASH_SEQ and ``qmm_tokens`` (the flattened
+    token count the quantized linears see; defaults to ``seq**2`` — one
+    pair-dataflow row set at batch 1) resolves the AAQ matmul against
+    MIN_QMM_TOKENS.  When the two resolutions agree the label stays
+    ``auto:<backend>``; when they split it reports both —
+    ``auto:attn=<a>,qmm=<q>`` — instead of letting the attention floor
+    speak for matmuls that actually run the other path.
     """
     mode = _check(backend) if backend is not None else _MODE
     interp = interpret_mode()
+
+    def tag(inner: str) -> str:
+        return "pallas-interpret" if inner == PALLAS and interp else inner
+
     if mode == AUTO:
-        inner = (_resolve(AUTO, True) if seq is None
-                 else resolve_attention(seq, seq, backend=AUTO))
-        if inner == PALLAS and interp:
-            inner = "pallas-interpret"
-        return f"auto:{inner}"
-    if mode == PALLAS and interp:
-        return "pallas-interpret"
-    return mode
+        if seq is None and qmm_tokens is None:
+            return f"auto:{tag(_resolve(AUTO, True))}"
+        if qmm_tokens is None:
+            qmm_tokens = seq * seq
+        attn = (resolve_attention(seq, seq, backend=AUTO)
+                if seq is not None else _resolve(AUTO, True))
+        qmm = resolve_matmul(qmm_tokens, backend=AUTO)
+        if attn == qmm:
+            return f"auto:{tag(attn)}"
+        return f"auto:attn={tag(attn)};qmm={tag(qmm)}"
+    return tag(mode)
 
 
 # --------------------------------------------------------------------------

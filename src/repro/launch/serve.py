@@ -24,6 +24,9 @@ interpret mode.  ``--report`` rows record the backend each batch ran under.
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --n 8 \
         --priority-split 0.25 --deadline-s 30 --driver thread
     PYTHONPATH=src python -m repro.launch.serve --mode ppm --kernels pallas
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --mode ppm \
+        --buckets 32,64 --mesh 2x4 --shard-threshold 64
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
 """
 from __future__ import annotations
@@ -42,8 +45,8 @@ from repro.kernels import dispatch
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
-from repro.serving import (CSV_HEADER, FoldClient, csv_row, pad_to_bucket,
-                           parse_buckets)
+from repro.serving import (CSV_HEADER, FoldClient, csv_row, make_serving_mesh,
+                           pad_to_bucket, parse_buckets)
 
 
 def _sample_trace(args) -> list[np.ndarray]:
@@ -106,11 +109,21 @@ def serve_ppm(args):
     if args.no_engine:
         return _serve_ppm_sequential(args, cfg, params, seqs, buckets)
 
+    if (args.mesh is None) != (args.shard_threshold is None):
+        print("error: --mesh and --shard-threshold must be given together "
+              "(one without the other shards nothing)")
+        return 2
+    try:
+        mesh = make_serving_mesh(args.mesh)
+    except ValueError as e:
+        print(f"error: {e}")
+        return 2
     client = FoldClient(
         params, cfg, args.scheme, buckets=buckets,
         max_tokens_per_batch=args.max_tokens_per_batch,
         max_batch=args.max_batch, mem_budget_mb=args.mem_budget_mb,
-        fidelity=not args.no_fidelity, kernels=args.kernels)
+        fidelity=not args.no_fidelity, kernels=args.kernels,
+        mesh=mesh, shard_threshold=args.shard_threshold)
     if args.warmup:
         client.warmup()
     tiers = priority_tiers(len(seqs), args.priority_split)
@@ -132,11 +145,13 @@ def serve_ppm(args):
     for r in results:
         print(csv_row(r))
     s = client.metrics.summary()
+    placements = sorted({r.placement for r in results if r.ok})
     print(f"# served={s['served']}/{s['requests']} "
           f"rejected={s['rejected']} expired={s['expired']} "
           f"compiles={s['compiles']} "
           f"req/s={s['requests_per_s']:.2f} tok/s={s['tokens_per_s']:.1f} "
           f"kernels={dispatch.describe(args.kernels)} "
+          f"placements={'/'.join(placements) or 'none'} "
           f"max_est_act_mb={s['max_est_act_mb']:.1f}"
           + (f" budget_mb={args.mem_budget_mb:.1f}"
              if args.mem_budget_mb else ""))
@@ -205,7 +220,16 @@ def main(argv=None):
     ap.add_argument("--max-tokens-per-batch", type=int, default=1024)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--mem-budget-mb", type=float, default=None,
-                    help="peak-activation budget for admission control")
+                    help="peak-activation budget for admission control "
+                         "(per device when --mesh shards a bucket)")
+    ap.add_argument("--mesh", default=None,
+                    help="serving device mesh 'DxM' (data x model), e.g. "
+                         "'2x4'; big buckets shard the pair representation "
+                         "over the model axis (see --shard-threshold)")
+    ap.add_argument("--shard-threshold", type=int, default=None,
+                    help="buckets >= this length run mesh-sharded over the "
+                         "model axis; smaller buckets stay single-device "
+                         "(requires --mesh)")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile every bucket before serving")
     ap.add_argument("--priority-split", type=float, default=0.0,

@@ -346,3 +346,19 @@ def ppm_constraints(mesh: Mesh):
         "z": P(None, data_axes(mesh), MODEL, None),   # (B, i, j, Hz)
         "s": P(None, data_axes(mesh), None),          # (B, N, Hm)
     }
+
+
+def ppm_serving_rules(mesh: Mesh) -> dict[str, P]:
+    """Pair-representation act rules for the mesh-sharded serving tier.
+
+    The serving engine lowers big-bucket executables under these: the pair
+    tensor (B, i, j, Hz) rides the model axis on j — the dimension every
+    Table-1 activation shares — so one block's per-device pair bytes drop
+    by |model|, which is exactly what the admission controller's per-device
+    pricing divides by.  Batch/i stay replicated: the long buckets this
+    tier exists for run at batch 1-2, and the trunk's ``constrain`` calls
+    at block boundaries re-pin the sharding so GSPMD keeps the triangular
+    ops between them partitioned.  The sequence track (B, N, Hm) is linear
+    in N and stays replicated (no rule = no constraint).
+    """
+    return {"pair": P(None, None, MODEL, None)}

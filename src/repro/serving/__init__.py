@@ -20,6 +20,9 @@ from repro.serving.events import (EVENT_KINDS, EVENT_ORDER, TERMINAL_EVENTS,
                                   check_request_order)
 from repro.serving.metrics import (CSV_HEADER, CompileWatcher, EngineMetrics,
                                    csv_row, percentiles)
+from repro.serving.placement import (SHARDED, SINGLE, Placement,
+                                     PlacementPolicy, make_serving_mesh,
+                                     parse_mesh_spec)
 from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
                                      parse_buckets, pow2_buckets)
 from repro.serving.types import (FoldRequest, FoldResult, pad_to_bucket,
@@ -33,6 +36,9 @@ __all__ = [
     # events
     "FoldEvent", "EventBus", "EventStream", "EVENT_KINDS", "EVENT_ORDER",
     "TERMINAL_EVENTS", "check_request_order",
+    # placement (mesh-sharded serving)
+    "Placement", "PlacementPolicy", "SINGLE", "SHARDED",
+    "make_serving_mesh", "parse_mesh_spec",
     # engine core + legacy wrapper
     "EngineCore", "FoldEngine", "FoldRequest", "FoldResult",
     "AdmissionController", "AdmissionDecision", "ADMIT", "DEFER", "REJECT",

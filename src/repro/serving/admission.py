@@ -11,10 +11,21 @@ threshold, and only the chunked (rows, H, q_chunk, N) slab above it (paper
 that would exceed the budget are deferred (the request waits for a smaller
 batch), and a request whose bucket exceeds the budget even alone is
 rejected deterministically.
+
+Per-device accounting (mesh-sharded serving): when the engine's placement
+policy routes a bucket to the mesh, ``shards_for`` reports its model-axis
+shard count and every estimate here becomes a *per-device* share —
+``ceil(total / shards)`` — because the pair activations, the score slab,
+and the residual stream all carry the j dimension the serving rules shard
+over ``model``.  ``mem_budget_bytes`` is therefore a per-device budget: a
+bucket that busts it solo on one device is *admitted* once sharding fits
+its share, which is the paper's long-sequence scalability story expressed
+as a scheduling verdict.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 from repro.core.schemes import QuantScheme
 from repro.models.ppm.model import pair_activation_inventory, score_tensor_shape
@@ -30,9 +41,10 @@ _SCORE_DTYPE_BYTES = 4          # fp32 logits/probs in both attention paths
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
     verdict: str                # ADMIT | DEFER | REJECT
-    est_bytes: int
+    est_bytes: int              # per-device when the bucket is sharded
     budget_bytes: int | None
     reason: str = ""
+    shards: int = 1
 
     def event_data(self) -> dict:
         """Telemetry payload for the client's DEFERRED/REJECTED events."""
@@ -41,32 +53,53 @@ class AdmissionDecision:
             "est_mb": self.est_bytes / 1e6,
             "budget_mb": (None if self.budget_bytes is None
                           else self.budget_bytes / 1e6),
+            "shards": self.shards,
             "reason": self.reason,
         }
 
 
 class AdmissionController:
-    """Prices (bucket, batch) candidates against a peak-activation budget."""
+    """Prices (bucket, batch) candidates against a peak-activation budget.
+
+    ``shards_for`` (bucket -> model-axis shard count, wired from the
+    engine's ``PlacementPolicy``) turns every estimate into the per-device
+    share; absent, everything is priced single-device (shards = 1).
+    """
 
     def __init__(self, cfg, scheme: QuantScheme,
                  mem_budget_bytes: int | None = None, *,
-                 chunked_len: int = CHUNKED_ATTN_LEN, q_chunk: int = 512):
+                 chunked_len: int = CHUNKED_ATTN_LEN, q_chunk: int = 512,
+                 shards_for: Callable[[int], int] | None = None):
         self.cfg = cfg
         self.scheme = scheme
         self.mem_budget_bytes = mem_budget_bytes
         self.chunked_len = chunked_len
         self.q_chunk = q_chunk
-        self._cache: dict[tuple[int, int], int] = {}
+        self.shards_for = shards_for
+        self._cache: dict[tuple[int, int, int], int] = {}
+
+    def _shards(self, ns: int, shards: int | None) -> int:
+        if shards is not None:
+            return max(1, shards)
+        if self.shards_for is not None:
+            return max(1, self.shards_for(ns))
+        return 1
 
     # -- pricing ----------------------------------------------------------
-    def estimate_bytes(self, ns: int, batch: int = 1) -> int:
-        """Estimated peak activation bytes for one (bucket=ns, batch) step."""
-        key = (ns, batch)
+    def estimate_bytes(self, ns: int, batch: int = 1,
+                       shards: int | None = None) -> int:
+        """Estimated peak activation bytes for one (bucket=ns, batch) step,
+        per device (``ceil(total / shards)`` under a sharded placement)."""
+        k = self._shards(ns, shards)
+        key = (ns, batch, k)
         if key not in self._cache:
-            self._cache[key] = (self._pair_bytes(ns, batch)
-                                + self._score_bytes(ns, batch)
-                                + self._residual_bytes(ns, batch))
+            self._cache[key] = -(-self._total_bytes(ns, batch) // k)
         return self._cache[key]
+
+    def _total_bytes(self, ns: int, batch: int) -> int:
+        return (self._pair_bytes(ns, batch)
+                + self._score_bytes(ns, batch)
+                + self._residual_bytes(ns, batch))
 
     def _pair_bytes(self, ns: int, batch: int) -> int:
         inv = pair_activation_inventory(self.cfg, ns, batch)
@@ -91,34 +124,43 @@ class AdmissionController:
         return batch * ns * ns * self.cfg.hz * itemsize
 
     # -- policy -----------------------------------------------------------
-    def admit(self, ns: int, batch: int) -> AdmissionDecision:
-        est = self.estimate_bytes(ns, batch)
+    def admit(self, ns: int, batch: int,
+              shards: int | None = None) -> AdmissionDecision:
+        k = self._shards(ns, shards)
+        est = self.estimate_bytes(ns, batch, k)
+        per_dev = f"/device over {k} shards" if k > 1 else ""
         if self.mem_budget_bytes is None or est <= self.mem_budget_bytes:
-            return AdmissionDecision(ADMIT, est, self.mem_budget_bytes)
+            return AdmissionDecision(ADMIT, est, self.mem_budget_bytes,
+                                     shards=k)
         if batch <= 1:
             return AdmissionDecision(
                 REJECT, est, self.mem_budget_bytes,
-                f"bucket {ns} needs ~{est / 1e6:.1f}MB alone; "
-                f"budget {self.mem_budget_bytes / 1e6:.1f}MB")
+                f"bucket {ns} needs ~{est / 1e6:.1f}MB{per_dev} alone; "
+                f"budget {self.mem_budget_bytes / 1e6:.1f}MB", shards=k)
         return AdmissionDecision(
             DEFER, est, self.mem_budget_bytes,
-            f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB over budget")
+            f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB{per_dev} "
+            f"over budget", shards=k)
 
-    def max_batch_for(self, ns: int, upper: int) -> int:
+    def max_batch_for(self, ns: int, upper: int,
+                      shards: int | None = None) -> int:
         """Largest batch <= upper within budget (0 = even batch 1 is over)."""
         for b in range(upper, 0, -1):
-            if self.admit(ns, b).verdict == ADMIT:
+            if self.admit(ns, b, shards).verdict == ADMIT:
                 return b
         return 0
 
-    def explain(self, ns: int, batch: int = 1) -> dict:
+    def explain(self, ns: int, batch: int = 1,
+                shards: int | None = None) -> dict:
         """Breakdown for reports/debugging (MB, not bytes)."""
+        k = self._shards(ns, shards)
         return {
-            "bucket": ns, "batch": batch,
+            "bucket": ns, "batch": batch, "shards": k,
             "pair_mb": self._pair_bytes(ns, batch) / 1e6,
             "score_mb": self._score_bytes(ns, batch) / 1e6,
             "residual_mb": self._residual_bytes(ns, batch) / 1e6,
-            "total_mb": self.estimate_bytes(ns, batch) / 1e6,
+            "total_mb": self._total_bytes(ns, batch) / 1e6,
+            "per_device_mb": self.estimate_bytes(ns, batch, k) / 1e6,
             "budget_mb": (None if self.mem_budget_bytes is None
                           else self.mem_budget_bytes / 1e6),
             "scheme": self.scheme.name,

@@ -148,6 +148,7 @@ class FoldClient:
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  mem_budget_mb: float | None = None, fidelity: bool = False,
                  kernels: str | None = None, keep_distogram: bool = True,
+                 mesh=None, shard_threshold: int | None = None,
                  clock: Callable[[], float] = time.monotonic,
                  core: EngineCore | None = None):
         if core is None:
@@ -158,12 +159,14 @@ class FoldClient:
                 max_batch=max_batch, mem_budget_mb=mem_budget_mb,
                 fidelity=fidelity,
                 kernels=dispatch.AUTO if kernels is None else kernels,
-                keep_distogram=keep_distogram, clock=clock)
+                keep_distogram=keep_distogram, mesh=mesh,
+                shard_threshold=shard_threshold, clock=clock)
         self.core = core
         self.clock = core.clock
         self.scheduler = TokenBudgetScheduler(
             core.buckets, max_tokens_per_batch=core.max_tokens_per_batch,
-            max_batch=core.max_batch, admission=core.admission)
+            max_batch=core.max_batch, admission=core.admission,
+            placement=core.placement)
         self.events = ev.EventBus(clock=self.clock)
         # live (non-terminal) requests only: handles unindex on reaching a
         # terminal state so a long-running server's memory is bounded by
@@ -206,6 +209,12 @@ class FoldClient:
             raise ValueError("priority/deadline_s kwargs conflict with an "
                              "explicit FoldRequest — set them on the request")
         with self._lock:
+            if self.events.closed:
+                # stop() closed the bus; silently dropping this request's
+                # events would make the stream lie — fail loudly instead
+                raise RuntimeError(
+                    "FoldClient is stopped (EventBus closed); call start() "
+                    "to re-arm it before submitting")
             if isinstance(seq, FoldRequest):
                 req = seq
                 if req.request_id in self.handles:
@@ -315,7 +324,8 @@ class FoldClient:
                     self.events.emit(ev.SCHEDULED, req.request_id,
                                      bucket=batch.bucket,
                                      batch_size=batch.batch_size,
-                                     est_mb=batch.est_bytes / 1e6)
+                                     est_mb=batch.est_bytes / 1e6,
+                                     placement=batch.placement)
                 t_start = self.clock()
                 for req in batch.requests:
                     self.handles[req.request_id]._advance(RUNNING, t_start)
@@ -365,7 +375,8 @@ class FoldClient:
                     request_id=r.request_id, length=r.length,
                     status=R_FAILED, priority=r.priority,
                     reason=f"batch execution failed: {e!r}",
-                    bucket=batch.bucket, batch_size=len(batch.requests))
+                    bucket=batch.bucket, batch_size=len(batch.requests),
+                    placement=batch.placement)
                     for r in batch.requests]
                 for res in results:
                     self.core.metrics.record(res)
@@ -389,10 +400,13 @@ class FoldClient:
 
     # -- background driver -------------------------------------------------
     def start(self) -> None:
-        """Start the background driver thread (idempotent)."""
+        """Start the background driver thread (idempotent).  Re-arms the
+        EventBus if a prior ``stop()`` closed it — streams attached before
+        the close stay terminated; attach new ones after ``start()``."""
         with self._lock:
             if self._driver is not None and self._driver.is_alive():
                 return
+            self.events.reopen()
             self._stop = False
             self._driver = threading.Thread(
                 target=self._driver_loop, name="fold-client-driver",
@@ -403,7 +417,10 @@ class FoldClient:
         """Stop the driver; with ``drain`` (default) pump the queue dry
         inline first so no accepted request is abandoned.  Blocks until the
         driver thread exits — it may be mid-compile, so this can take a
-        while; a timed join would risk two threads pumping the core."""
+        while; a timed join would risk two threads pumping the core.
+        Closes the EventBus: further ``submit()``s raise until ``start()``
+        re-arms it.  Wall time spent draining accrues to the metrics, so a
+        server-mode summary's requests_per_s/tokens_per_s stay truthful."""
         with self._lock:
             self._stop = True
             self._cond.notify_all()
@@ -412,8 +429,15 @@ class FoldClient:
             d.join()
         self._driver = None
         if drain:
+            t0 = time.perf_counter()
             self.drive()
-        self.events.close()
+            self.core.metrics.add_wall_s(time.perf_counter() - t0)
+        self.events.dispatch()       # pending callbacks run off the lock
+        with self._lock:
+            # under the client lock: submit() checks closed and emits under
+            # the same lock, so it either completes fully before the close
+            # or sees the closed bus and raises cleanly — never half-queues
+            self.events.close()
 
     @property
     def driving(self) -> bool:
@@ -421,9 +445,22 @@ class FoldClient:
         return d is not None and d.is_alive()
 
     def _driver_loop(self) -> None:
+        # Serving wall time accrues HERE, continuously — a server that is
+        # never stopped through run() (which assigns wall_s itself) must
+        # still report nonzero requests_per_s/tokens_per_s.  Idle waits
+        # count too: a mostly-idle server honestly reports low throughput.
+        last = time.perf_counter()
+
+        def accrue() -> None:
+            nonlocal last
+            now = time.perf_counter()
+            self.core.metrics.add_wall_s(now - last)
+            last = now
+
         while True:
             with self._lock:
                 if self._stop:
+                    accrue()
                     return
             try:
                 made_progress = bool(self.drive(max_batches=1))
@@ -432,10 +469,12 @@ class FoldClient:
                 # already converted to FAILED results inside drive)
                 self.driver_errors.append(e)
                 made_progress = False
+            accrue()
             if made_progress:
                 continue
             with self._lock:
                 if self._stop:
+                    accrue()
                     return
                 # Idle.  An empty queue can only change via submit/cancel/
                 # stop — all of which notify — so a long bounded wait is
@@ -445,6 +484,7 @@ class FoldClient:
                 # short nap to yield the lock.
                 self._cond.wait(0.5 if self.scheduler.pending == 0
                                 else 0.01)
+            accrue()
 
     # -- result waiting ----------------------------------------------------
     def _wait(self, handle: FoldHandle, timeout: float | None) -> FoldResult:

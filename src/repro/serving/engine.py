@@ -20,7 +20,14 @@ Core responsibilities:
     Pallas flash/AAQ kernels or the XLA refs — each served batch records
     which backend it ran;
   * the AAQ-aware admission controller (repro.serving.admission) pricing
-    every (bucket, batch) candidate in peak activation bytes.
+    every (bucket, batch) candidate in peak activation bytes — *per device*
+    when the bucket is mesh-sharded;
+  * a device-mesh placement layer (repro.serving.placement): with
+    ``mesh=``/``shard_threshold=`` set, buckets at/above the threshold are
+    lowered under the mesh with the pair representation sharded over the
+    model axis (``ppm_serving_rules``), smaller buckets stay single-device.
+    The placement label is part of the executable-cache key (zero steady-
+    state recompiles still holds) and is stamped on every ``FoldResult``.
 
 Numerics contract: padding is non-rescaling masking end to end (see
 ``ppm_forward``), so a request served from a padded batch yields coords
@@ -51,6 +58,8 @@ from repro.models.ppm import ppm_forward, tm_score
 from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
 from repro.serving.admission import AdmissionController
 from repro.serving.metrics import EngineMetrics
+from repro.serving.placement import (PlacementPolicy, lower_sharded,
+                                     place_inputs)
 from repro.serving.scheduler import ScheduledBatch
 from repro.serving.types import (FoldResult, pad_to_bucket, strip_padding)
 
@@ -62,6 +71,7 @@ class EngineCore:
                  mem_budget_mb: float | None = None,
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True,
+                 mesh=None, shard_threshold: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.scheduler import pow2_buckets
         self.params = params
@@ -81,14 +91,19 @@ class EngineCore:
             raise ValueError(f"kernels must be one of {dispatch.BACKENDS}, "
                              f"got {kernels!r}")
         self.kernels = kernels
+        self.placement = PlacementPolicy(mesh=mesh,
+                                         shard_threshold=shard_threshold)
         budget = None if mem_budget_mb is None else int(mem_budget_mb * 1e6)
         # pricing switches to the chunked score-slab model at the model's
-        # token-wise MHA threshold
-        self.admission = AdmissionController(cfg, self.scheme, budget,
-                                             chunked_len=CHUNKED_ATTN_LEN)
+        # token-wise MHA threshold; per-device under sharded placements
+        # (mem_budget_mb is a per-device budget)
+        self.admission = AdmissionController(
+            cfg, self.scheme, budget, chunked_len=CHUNKED_ATTN_LEN,
+            shards_for=self.placement.shards_for)
         self.metrics = EngineMetrics()
         self._fp_scheme = FP16Baseline()
-        self._executables: dict[tuple[int, str], object] = {}
+        self._executables: dict[tuple[int, str, str], object] = {}
+        self._placed_params: dict[str, object] = {}
         self._compile_count = 0
 
     # -- shape policy -----------------------------------------------------
@@ -110,27 +125,46 @@ class EngineCore:
         return self._compile_count
 
     def _executable(self, bucket: int, scheme: QuantScheme):
-        """AOT-compiled forward for (bucket, scheme); cached, counted.
+        """AOT-compiled forward for (bucket, scheme, placement); cached,
+        counted.
 
         Lowered under the core's kernel backend, so a ``kernels='pallas'``
         engine bakes the Pallas flash/AAQ kernels into every bucketed
-        executable (interpret mode off-TPU).
+        executable (interpret mode off-TPU).  The placement label is part
+        of the cache key: routing a bucket to the mesh is a distinct
+        executable, and repeated batches of the same (bucket, scheme,
+        placement) never recompile.
         """
-        key = (bucket, scheme.name)
+        placement = self.placement.placement_for(bucket)
+        key = (bucket, scheme.name, placement.label)
         if key in self._executables:
             return self._executables[key], 0.0
         batch = self.batch_for_bucket(bucket)
-        fn = jax.jit(partial(self._forward, scheme))
         aat = jax.ShapeDtypeStruct((batch, bucket), jnp.int32)
         msk = jax.ShapeDtypeStruct((batch, bucket), jnp.bool_)
         t0 = time.perf_counter()
         with dispatch.use_backend(self.kernels):
-            compiled = fn.lower(self.params, aat, msk).compile()
+            fwd = partial(self._forward, scheme)
+            if placement.sharded:
+                compiled = lower_sharded(placement, fwd, self.params,
+                                         aat, msk)
+            else:
+                compiled = jax.jit(fwd).lower(self.params, aat, msk).compile()
         compile_s = time.perf_counter() - t0
         self._executables[key] = compiled
         self._compile_count += 1
         self.metrics.record_compile(bucket, compile_s * 1e3)
         return compiled, compile_s
+
+    def _params_for(self, placement):
+        """Call-time params matching the placement's lowered shardings
+        (mesh-replicated copies are cached per placement label)."""
+        if not placement.sharded:
+            return self.params
+        if placement.label not in self._placed_params:
+            [placed] = place_inputs(placement, self.params)
+            self._placed_params[placement.label] = placed
+        return self._placed_params[placement.label]
 
     def _forward(self, scheme, params, aatype, mask):
         return ppm_forward(params, aatype, self.cfg, scheme, mask=mask)
@@ -147,14 +181,19 @@ class EngineCore:
         """Run one scheduled batch to FoldResults (recorded in metrics)."""
         bucket = batch.bucket
         static_b = self.batch_for_bucket(bucket)
+        placement = self.placement.placement_for(bucket)
         est = self.admission.estimate_bytes(bucket, static_b)
         batch_start = self.clock()        # queue wait ends here: compile and
         compiled, compile_s = self._executable(bucket, self.scheme)  # run are
         aat, mask = pad_to_bucket([r.aatype for r in batch.requests],  # their
                                   bucket, static_b)                 # own cols
         aat_j, mask_j = jnp.asarray(aat), jnp.asarray(mask)
+        params = self._params_for(placement)
+        if placement.sharded:
+            # AOT executables demand inputs matching their lowered shardings
+            aat_j, mask_j = place_inputs(placement, aat_j, mask_j)
         t_run = time.perf_counter()
-        out = compiled(self.params, aat_j, mask_j)
+        out = compiled(params, aat_j, mask_j)
         jax.block_until_ready(out["coords"])
         run_s = time.perf_counter() - t_run
 
@@ -168,10 +207,14 @@ class EngineCore:
         if self.fidelity and self.scheme.name != self._fp_scheme.name:
             fp_exec, fp_compile_s = self._executable(bucket, self._fp_scheme)
             compile_s += fp_compile_s
-            fp_out = fp_exec(self.params, aat_j, mask_j)
+            fp_out = fp_exec(params, aat_j, mask_j)
             fp_coords = np.asarray(fp_out["coords"])
 
-        backend = dispatch.describe(self.kernels, seq=bucket)
+        # label both auto-mode resolutions honestly: the attention floor at
+        # this bucket's seq length AND the AAQ-matmul floor at the pair-
+        # dataflow token count the bucketed executable actually flattens
+        backend = dispatch.describe(self.kernels, seq=bucket,
+                                    qmm_tokens=static_b * bucket * bucket)
         results = []
         for row, req in enumerate(batch.requests):
             stripped = strip_padding(host, row, req.length)
@@ -191,7 +234,8 @@ class EngineCore:
                 compile_ms=compile_s * 1e3,
                 run_ms=run_s * 1e3,
                 est_activation_bytes=est,
-                kernel_backend=backend))
+                kernel_backend=backend,
+                placement=placement.label))
         for r in results:
             self.metrics.record(r)
         return results
@@ -213,13 +257,15 @@ class FoldEngine:
                  mem_budget_mb: float | None = None,
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True,
+                 mesh=None, shard_threshold: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.client import FoldClient
         self.client = FoldClient(
             params, cfg, scheme, buckets=buckets,
             max_tokens_per_batch=max_tokens_per_batch, max_batch=max_batch,
             mem_budget_mb=mem_budget_mb, fidelity=fidelity, kernels=kernels,
-            keep_distogram=keep_distogram, clock=clock)
+            keep_distogram=keep_distogram, mesh=mesh,
+            shard_threshold=shard_threshold, clock=clock)
         self.core = self.client.core
 
     # -- delegated state ---------------------------------------------------
@@ -230,6 +276,7 @@ class FoldEngine:
     kernels = property(lambda self: self.core.kernels)
     fidelity = property(lambda self: self.core.fidelity)
     admission = property(lambda self: self.core.admission)
+    placement = property(lambda self: self.core.placement)
     scheduler = property(lambda self: self.client.scheduler)
     metrics = property(lambda self: self.core.metrics)
     compile_count = property(lambda self: self.core.compile_count)

@@ -76,6 +76,11 @@ class EventStream:
     # -- bus side --
     def _push(self, ev: FoldEvent) -> None:
         with self._cond:
+            if self._closed:
+                # a closed stream silently eating events would make its
+                # consumer's history lie; the bus detaches closed streams,
+                # so reaching this is a plumbing bug — fail loudly
+                raise RuntimeError("push into a closed EventStream")
             self._buf.append(ev)
             self._cond.notify_all()
 
@@ -113,7 +118,15 @@ class EventBus:
     to streams atomically (call it while holding whatever lock defines your
     event order — seq order is then exactly that order); callbacks are
     queued and run later via ``dispatch()``, outside any caller lock, in
-    seq order (a dispatch lock serializes drains across threads)."""
+    seq order (a dispatch lock serializes drains across threads).
+
+    Close semantics: ``close()`` terminates and detaches every attached
+    stream (their buffered events stay drainable) and marks the bus closed
+    — a subsequent ``emit`` raises instead of silently dropping the event.
+    ``reopen()`` re-arms a closed bus (what ``FoldClient.start()`` does
+    after a ``stop()``): the sequence counter continues, previously closed
+    streams stay closed, new subscribers/streams see everything emitted
+    after they attach."""
 
     def __init__(self, clock: Callable[[], float] | None = None):
         import time
@@ -121,10 +134,15 @@ class EventBus:
         self._lock = threading.Lock()
         self._dispatch_lock = threading.Lock()
         self._seq = 0
+        self._closed = False
         self._callbacks: list[Callable[[FoldEvent], None]] = []
         self._streams: list[EventStream] = []
         self._cb_queue: deque[FoldEvent] = deque()
         self.callback_errors: list[Exception] = []
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def subscribe(self, callback: Callable[[FoldEvent], None]) -> Callable[[], None]:
         with self._lock:
@@ -148,6 +166,11 @@ class EventBus:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
         with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    f"emit({kind!r}, request {request_id}) on a closed "
+                    f"EventBus — the publisher was stopped; reopen() "
+                    f"(FoldClient.start()) re-arms it")
             self._seq += 1
             ev = FoldEvent(self._seq, kind, request_id, self._clock(), data)
             sinks = list(self._streams)
@@ -180,11 +203,21 @@ class EventBus:
         return ev
 
     def close(self) -> None:
+        """Idempotent: drain callbacks, terminate + detach every stream,
+        mark the bus closed (emit-after-close raises)."""
         self.dispatch()
         with self._lock:
+            self._closed = True
             sinks = list(self._streams)
-        for s in sinks:
+            self._streams.clear()    # a reopened bus must never push into
+        for s in sinks:              # these terminated streams
             s._close()
+
+    def reopen(self) -> None:
+        """Re-arm a closed bus (no-op when open).  Streams closed by the
+        prior ``close()`` stay closed; attach new ones after reopening."""
+        with self._lock:
+            self._closed = False
 
 
 def check_request_order(events: list[FoldEvent]) -> None:

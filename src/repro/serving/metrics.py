@@ -116,7 +116,8 @@ class BucketStats:
 
 
 CSV_HEADER = ("request,len,bucket,batch,status,priority,queue_ms,compile_ms,"
-              "run_ms,tm_vs_fp,padding_frac,est_act_mb,kernel_backend")
+              "run_ms,tm_vs_fp,padding_frac,est_act_mb,kernel_backend,"
+              "placement")
 
 
 def csv_row(r: FoldResult) -> str:
@@ -125,7 +126,7 @@ def csv_row(r: FoldResult) -> str:
             f"{r.priority},"
             f"{r.queue_wait_ms:.1f},{r.compile_ms:.1f},{r.run_ms:.1f},{tm},"
             f"{r.padding_frac:.3f},{r.est_activation_bytes / 1e6:.1f},"
-            f"{r.kernel_backend}")
+            f"{r.kernel_backend},{r.placement}")
 
 
 class EngineMetrics:
@@ -164,6 +165,13 @@ class EngineMetrics:
             # (record_compile), NOT per request — every request in a batch
             # carries the same FoldResult.compile_ms, summing those would
             # multiply by batch size
+
+    def add_wall_s(self, dt: float) -> None:
+        """Accrue serving wall time (the background driver calls this
+        continuously, so a server-mode ``summary()`` reports truthful
+        requests_per_s/tokens_per_s without anyone assigning ``wall_s``)."""
+        with self._lock:
+            self.wall_s += dt
 
     def record_compile(self, bucket: int, ms: float) -> None:
         with self._lock:
@@ -234,6 +242,7 @@ class EngineMetrics:
             "padding_frac": r.padding_frac,
             "est_activation_bytes": r.est_activation_bytes,
             "kernel_backend": r.kernel_backend,
+            "placement": r.placement,
         }
 
     def save(self, path: str) -> None:

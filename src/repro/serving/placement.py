@@ -1,0 +1,158 @@
+"""Device-mesh placement for the serving tier.
+
+The paper's headline claim is that shrinking peak activation bytes makes
+*long* sequences servable at all — and past a single device's memory the
+same story continues across a mesh: shard the pair representation over the
+model axis and the per-device share of the Table-1 accounting drops by the
+shard count.  This module decides, per bucket, where its executable lives:
+
+  * buckets below ``shard_threshold`` (or with no mesh at all) stay on the
+    default single-device jit path — byte-for-byte the pre-mesh engine;
+  * buckets at/above the threshold are lowered under the mesh with the
+    pair tensor's j axis sharded over ``model`` via the logical-axis rules
+    in ``repro.parallel.sharding`` (``ppm_serving_rules``): the trunk's
+    ``constrain(z, "pair")`` call at every block boundary pins the sharding
+    and GSPMD partitions the triangular ops/attention between.  One
+    lowering path (jit + sharding constraints, not a hand-rolled
+    ``shard_map`` forward) keeps sharded and single-device executables the
+    same traced program, which is what makes the parity gate cheap to hold.
+
+A ``Placement`` is part of the engine's executable-cache key, so routing a
+bucket to the mesh can never recompile in steady state, and its ``label``
+is the string that rides ``ScheduledBatch`` / ``FoldResult.placement`` into
+the CSV/JSON reports (no commas: it must survive the CSV row format).
+
+The admission controller consumes ``PlacementPolicy.shards_for`` to price
+candidates in *per-device* bytes — a bucket whose estimate busts the budget
+alone on one device is admitted when sharding fits it (the paper's
+scalability story as a live scheduling signal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+
+SINGLE = "single"
+SHARDED = "sharded"
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where one bucket's executable is lowered and run."""
+    kind: str                                  # SINGLE | SHARDED
+    label: str                                 # cache-key + report column
+    model_shards: int = 1                      # model-axis size (1 = solo)
+    mesh: Any = dataclasses.field(default=None, compare=False)
+
+    @property
+    def sharded(self) -> bool:
+        return self.kind == SHARDED
+
+
+SINGLE_PLACEMENT = Placement(SINGLE, SINGLE)
+
+
+def parse_mesh_spec(spec: str) -> tuple[int, int]:
+    """``--mesh`` CLI spec 'DxM' (data x model), e.g. '2x4' or '1x8'."""
+    try:
+        d, m = (int(tok) for tok in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh must look like '2x4' (data x model), "
+                         f"got {spec!r}") from None
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh axes must be positive, got {spec!r}")
+    return d, m
+
+
+def make_serving_mesh(spec: str | None):
+    """Build the (data, model) serving mesh from a CLI spec (None = no
+    mesh, single-device serving).  Raises with the XLA host-device hint
+    when the spec asks for more devices than the process has."""
+    if spec in (None, "", "none"):
+        return None
+    d, m = parse_mesh_spec(spec)
+    n = len(jax.devices())
+    if d * m > n:
+        raise ValueError(
+            f"--mesh {spec} needs {d * m} devices but only {n} visible "
+            f"(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={d * m} before importing jax)")
+    from repro.launch.mesh import make_mesh
+    return make_mesh((d, m), ("data", "model"))
+
+
+class PlacementPolicy:
+    """bucket -> Placement.  Both of mesh/shard_threshold set = sharded
+    tier active; both None = everything single-device.  Exactly one set is
+    a configuration error — a mesh nothing routes to (or a threshold with
+    nowhere to shard) would silently serve everything single-device while
+    the operator believes otherwise."""
+
+    def __init__(self, mesh=None, shard_threshold: int | None = None):
+        if (mesh is None) != (shard_threshold is None):
+            raise ValueError(
+                "mesh and shard_threshold must be set together: a mesh "
+                "without a threshold (or vice versa) shards nothing")
+        self.mesh = mesh
+        self.shard_threshold = shard_threshold
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(f"serving mesh needs a 'model' axis, "
+                                 f"got {mesh.axis_names}")
+            self._model = int(mesh.shape["model"])
+            data = int(mesh.devices.size // self._model)
+            self._sharded = Placement(SHARDED, f"mesh:{data}x{self._model}",
+                                      self._model, mesh)
+
+    def placement_for(self, bucket: int) -> Placement:
+        if (self.mesh is None or self.shard_threshold is None
+                or bucket < self.shard_threshold):
+            return SINGLE_PLACEMENT
+        if bucket % self._model != 0:
+            # an un-divisible bucket would replicate anyway (the rules are
+            # divisibility-guarded); keep it honestly single-device
+            return SINGLE_PLACEMENT
+        return self._sharded
+
+    def shards_for(self, bucket: int) -> int:
+        """Model-axis shard count admission divides per-device bytes by."""
+        return self.placement_for(bucket).model_shards
+
+    def label_for(self, bucket: int) -> str:
+        return self.placement_for(bucket).label
+
+
+def lower_sharded(placement: Placement, forward, params, *args):
+    """AOT-lower ``forward(params, *args)`` under the placement's mesh.
+
+    Params and the (tiny) aatype/mask inputs are replicated; the pair
+    activations are sharded by the ``constrain(z, "pair")`` calls inside
+    the trunk picking up ``ppm_serving_rules`` — GSPMD propagates the
+    model-axis sharding through the triangular ops between block
+    boundaries.  Must be called under the engine's kernel-backend scope so
+    the sharded executable bakes the same kernels as the single-device one.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import sharding as sh
+
+    mesh = placement.mesh
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(forward, in_shardings=(repl, repl, repl))
+    with mesh, sh.act_rules(sh.ppm_serving_rules(mesh)):
+        return fn.lower(params, *args).compile()
+
+
+def place_inputs(placement: Placement, *arrays):
+    """Replicate call-time inputs onto the placement's mesh (AOT-compiled
+    executables require arguments that match their lowered shardings)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    repl = NamedSharding(placement.mesh, P())
+    put = partial(jax.device_put, device=repl)
+    return tuple(put(a) for a in arrays)

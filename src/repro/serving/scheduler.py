@@ -24,7 +24,11 @@ picked into the batch before any lower tier.
 Request lifecycle hooks (used by the FoldClient pump):
 
   * ``cancel(request_id)`` removes a still-queued request (False once it
-    left the queue — it is in a batch or already terminal);
+    left the queue — it is in a batch or already terminal).  O(1): queued
+    requests are indexed by id (``_live``); cancellation pops the index
+    and the dead deque entry is compacted lazily the next time its bucket
+    forms a batch or expiry sweeps — no per-cancel linear scan over every
+    bucket queue;
   * ``purge_expired(now)`` removes and returns every queued request whose
     deadline has passed.  ``now`` must come from the same monotonic clock
     that stamped ``arrival_time``/``deadline_at`` at submit.
@@ -85,9 +89,11 @@ def _urgency(r: FoldRequest) -> tuple[float, float, int]:
 class ScheduledBatch:
     bucket: int
     requests: tuple[FoldRequest, ...]
-    est_bytes: int
+    est_bytes: int                     # per-device under a sharded placement
     deferred: tuple[int, ...] = ()     # request ids left queued because
                                        # admission stopped this batch's growth
+    placement: str = "single"          # PlacementPolicy label this bucket's
+                                       # executable runs under
 
     @property
     def batch_size(self) -> int:
@@ -103,15 +109,21 @@ class Rejection:
 class TokenBudgetScheduler:
     def __init__(self, buckets: tuple[int, ...], *,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
-                 admission: AdmissionController | None = None):
+                 admission: AdmissionController | None = None,
+                 placement=None):
         if not buckets:
             raise ValueError("need at least one bucket edge")
         self.buckets = tuple(sorted(buckets))
         self.max_tokens_per_batch = max_tokens_per_batch
         self.max_batch = max_batch
         self.admission = admission
+        self.placement = placement     # PlacementPolicy (or None = single)
         self._queues: dict[int, deque[FoldRequest]] = {
             b: deque() for b in self.buckets}
+        # queued requests by id: O(1) cancellation and the authoritative
+        # ``pending`` count (deques may carry cancelled tombstones until
+        # their bucket is next compacted)
+        self._live: dict[int, FoldRequest] = {}
 
     # -- intake -----------------------------------------------------------
     def bucket_for(self, length: int) -> int | None:
@@ -135,29 +147,34 @@ class TokenBudgetScheduler:
             if d.verdict == REJECT:
                 return Rejection(req, d.reason)
         self._queues[bucket].append(req)
+        self._live[req.request_id] = req
         return None
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return len(self._live)
 
     # -- lifecycle purging ------------------------------------------------
     def cancel(self, request_id: int) -> bool:
-        """Remove a still-queued request; False once it left the queue."""
-        for q in self._queues.values():
-            for r in q:
-                if r.request_id == request_id:
-                    q.remove(r)
-                    return True
-        return False
+        """Remove a still-queued request; False once it left the queue.
+        O(1): pops the id index — the deque entry is a tombstone compacted
+        on the bucket's next batch formation / expiry sweep."""
+        return self._live.pop(request_id, None) is not None
 
     def purge_expired(self, now: float) -> list[FoldRequest]:
-        """Drop and return queued requests whose deadline passed at ``now``."""
+        """Drop and return queued requests whose deadline passed at ``now``
+        (also compacts cancellation tombstones out of every bucket queue)."""
         expired: list[FoldRequest] = []
         for bucket, q in self._queues.items():
             alive: deque[FoldRequest] = deque()
             for r in q:
-                (expired if r.expired(now) else alive).append(r)
+                if r.request_id not in self._live:
+                    continue                      # cancelled tombstone
+                if r.expired(now):
+                    expired.append(r)
+                    del self._live[r.request_id]
+                else:
+                    alive.append(r)
             self._queues[bucket] = alive
         return expired
 
@@ -165,9 +182,10 @@ class TokenBudgetScheduler:
     def _best_bucket(self) -> int | None:
         best, best_key = None, None
         for bucket, q in self._queues.items():
-            if not q:
+            keys = [_urgency(r) for r in q if r.request_id in self._live]
+            if not keys:
                 continue
-            key = min(_urgency(r) for r in q)
+            key = min(keys)
             if best_key is None or key < best_key:
                 best, best_key = bucket, key
         return best
@@ -189,7 +207,8 @@ class TokenBudgetScheduler:
         bucket = self._best_bucket()
         if bucket is None:
             return None
-        q = sorted(self._queues[bucket], key=_urgency)
+        q = sorted((r for r in self._queues[bucket]
+                    if r.request_id in self._live), key=_urgency)
         picked: list[FoldRequest] = []
         stop = None
         while q:
@@ -198,8 +217,16 @@ class TokenBudgetScheduler:
                 break
             picked.append(q.pop(0))
         self._queues[bucket] = deque(q)
+        for r in picked:
+            # pop, not del: direct scheduler users may queue duplicate ids
+            # (only FoldClient rejects them eagerly) and both deque entries
+            # are picked here — serve both rather than KeyError mid-batch
+            self._live.pop(r.request_id, None)   # left the queue: cancel -> False
         est = (self.admission.estimate_bytes(bucket, len(picked))
                if self.admission is not None else 0)
         deferred = (tuple(r.request_id for r in q)
                     if stop == "admission" else ())
-        return ScheduledBatch(bucket, tuple(picked), est, deferred)
+        label = (self.placement.label_for(bucket)
+                 if self.placement is not None else "single")
+        return ScheduledBatch(bucket, tuple(picked), est, deferred,
+                              placement=label)

@@ -67,8 +67,11 @@ class FoldResult:
     compile_ms: float = 0.0            # 0 on executable-cache hits
     run_ms: float = 0.0
     est_activation_bytes: int = 0      # admission-control price of its batch
+                                       # (per-device under a sharded placement)
     kernel_backend: str = ""           # dispatch label the batch ran under
                                        # (ref | pallas | pallas-interpret | auto:*)
+    placement: str = "single"          # device placement its executable ran
+                                       # under ("single" | "mesh:DxM")
 
     @property
     def ok(self) -> bool:

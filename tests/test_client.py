@@ -305,6 +305,50 @@ def test_background_driver_serves_and_stops():
         assert h.status == DONE
 
 
+def test_background_driver_accrues_wall_time():
+    """Server-mode summaries must be truthful: a pure start/submit/stop
+    run — nobody ever assigns ``wall_s`` — reports nonzero throughput
+    (the driver loop accrues serving wall time itself)."""
+    client = _client()
+    client.start()
+    for h in [client.submit(_seq(ln)) for ln in (20, 24)]:
+        assert h.result(timeout=600.0).ok
+    client.stop()
+    s = client.metrics.summary()
+    assert s["served"] == 2
+    assert s["wall_s"] > 0.0
+    assert s["requests_per_s"] > 0.0 and s["tokens_per_s"] > 0.0
+
+
+def test_stop_closes_bus_and_start_rearms():
+    """Defined emit-after-close semantics: submit on a stopped client
+    raises instead of silently dropping events; start() re-arms the bus
+    (old streams stay terminated, new ones see the new lifecycle)."""
+    client = _client()
+    client.start()
+    old_stream = client.stream()
+    h = client.submit(_seq(20))
+    assert h.result(timeout=600.0).ok
+    client.stop()
+    assert client.events.closed
+    assert [e.kind for e in old_stream.events()]      # history drainable
+    assert old_stream.next_event(timeout=0.0) is None  # ...but terminated
+    with pytest.raises(RuntimeError, match="stopped"):
+        client.submit(_seq(24))
+    with pytest.raises(RuntimeError, match="closed"):
+        client.events.emit(ev.SUBMITTED, 99)
+
+    client.start()                                    # re-arm
+    assert not client.events.closed
+    new_stream = client.stream()
+    h2 = client.submit(_seq(24))
+    assert h2.result(timeout=600.0).ok
+    client.stop()
+    kinds = [e.kind for e in new_stream.events()]
+    assert ev.SUBMITTED in kinds and ev.COMPLETED in kinds
+    assert old_stream.events() == []                  # detached at close
+
+
 # --------------------------------------------------------------------------
 # the acceptance scenario
 # --------------------------------------------------------------------------

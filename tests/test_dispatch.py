@@ -46,7 +46,35 @@ def test_auto_resolution_and_describe_off_tpu():
     assert dispatch.describe() == "auto:ref"
     assert dispatch.describe(dispatch.REF) == "ref"
     assert dispatch.describe(dispatch.PALLAS) == "pallas-interpret"
+    # off-TPU both per-op resolutions are ref, so shape hints never split
+    assert dispatch.describe(dispatch.AUTO, seq=512) == "auto:ref"
+    assert dispatch.describe(dispatch.AUTO, seq=512,
+                             qmm_tokens=4) == "auto:ref"
     assert dispatch.interpret_mode()
+
+
+def test_describe_reports_split_auto_resolutions(monkeypatch):
+    """Auto-mode labels must fold in BOTH dispatch floors: a bucket whose
+    attention clears MIN_FLASH_SEQ but whose matmuls fall below
+    MIN_QMM_TOKENS (and vice versa) is reported as the split it actually
+    runs, not whichever the attention floor alone says."""
+    monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "tpu")
+    assert not dispatch.interpret_mode()
+    # agree high / agree low: one label
+    assert dispatch.describe(dispatch.AUTO, seq=256) == "auto:pallas"
+    assert dispatch.describe(dispatch.AUTO, seq=32,
+                             qmm_tokens=8) == "auto:ref"
+    # attention pallas, matmul ref (tiny token count)
+    assert dispatch.describe(dispatch.AUTO, seq=256,
+                             qmm_tokens=8) == "auto:attn=pallas;qmm=ref"
+    # the reported bug's converse: bucket below MIN_FLASH_SEQ whose
+    # pair-dataflow token count (seq**2 default) clears MIN_QMM_TOKENS
+    assert dispatch.describe(dispatch.AUTO,
+                             seq=64) == "auto:attn=ref;qmm=pallas"
+    # explicit modes are unaffected by the hints
+    assert dispatch.describe(dispatch.REF, seq=256, qmm_tokens=8) == "ref"
+    # the split label must survive a CSV row (no commas)
+    assert "," not in dispatch.describe(dispatch.AUTO, seq=256, qmm_tokens=8)
 
 
 def test_explicit_backend_arg_overrides_mode():

@@ -190,6 +190,36 @@ def test_chunked_bucket_batch_matches_batch1_bitwise():
         np.testing.assert_array_equal(r.coords, r1.coords)
 
 
+def test_scheduler_cancel_is_indexed_not_scanned():
+    """Cancellation pops the O(1) id index; the deque tombstone is
+    compacted lazily and never reaches a batch, pending, or expiry."""
+    sched = TokenBudgetScheduler((32, 64), max_tokens_per_batch=1024,
+                                 max_batch=8)
+    for i in range(20):
+        assert sched.submit(FoldRequest(i, _seq(20 + (i % 2) * 20)),
+                            now=float(i)) is None
+    assert sched.pending == 20
+    assert sched.cancel(3) and sched.cancel(4) and sched.cancel(19)
+    assert not sched.cancel(3)            # already cancelled
+    assert not sched.cancel(999)          # never queued
+    assert sched.pending == 17            # index, not deque length
+    served = []
+    while sched.pending:
+        served += [r.request_id for r in sched.next_batch().requests]
+    assert len(served) == 17
+    assert not {3, 4, 19} & set(served)
+    assert not sched.cancel(served[0])    # left the queue: cancel is False
+
+
+def test_cancelled_request_never_resurrects_as_expired():
+    sched = TokenBudgetScheduler((32,))
+    req = FoldRequest(0, _seq(20), deadline_s=1.0)
+    sched.submit(req, now=0.0)
+    assert sched.cancel(0)
+    assert sched.purge_expired(now=100.0) == []   # tombstone, not expiry
+    assert sched.pending == 0 and sched.next_batch() is None
+
+
 def test_fcfs_across_buckets():
     sched = TokenBudgetScheduler((32, 64), max_tokens_per_batch=512)
     sched.submit(FoldRequest(0, _seq(50)), now=1.0)    # bucket 64, oldest
@@ -266,7 +296,7 @@ def test_results_record_kernel_backend():
                         max_tokens_per_batch=64, max_batch=2)
     [r] = engine.run([_seq(20)])
     assert r.kernel_backend == "ref"
-    assert csv_row(r).endswith(",ref")
+    assert csv_row(r).endswith(",ref,single")   # backend + placement columns
     buf = _io.StringIO()
     engine.metrics.write_json(buf)
     assert '"kernel_backend": "ref"' in buf.getvalue()
