@@ -4,9 +4,21 @@ request trace (requests/s, tokens/s, and p50/p95/p99 queue-wait/run tails),
 plus the admission-control bound check — every batch the engine ran must
 have been priced under the peak-activation budget.
 
-``main`` returns a summary dict (engine-vs-client throughput + p99s);
-``benchmarks/run.py --out`` writes it to the repo-root ``BENCH_serving.json``
-the nightly job uploads.
+The headline number is the ENGINE/SEQUENTIAL THROUGHPUT RATIO: the batching
+machinery exists to beat the naive one-request-at-a-time loop, and a ratio
+below 1.0 is a regression this bench now refuses to report quietly (a loud
+multi-line warning, plus the ratio and the mean batch occupancy committed
+into ``BENCH_serving.json`` so the trajectory is auditable per commit).
+
+The client path runs the dispatch/retire pipeline at ``--inflight-depth``
+(default 2) and then re-runs the same trace at depth 1 on the same warm
+executables, asserting the pipelined coords are bitwise identical and
+``compile_count`` is unchanged across depths — the hard numerics contract
+of the pipelined engine, checked on every bench run.
+
+``main`` returns a summary dict (throughputs, ratios, occupancy, pipeline
+stats); ``benchmarks/run.py --out`` writes it to the repo-root
+``BENCH_serving.json`` the nightly job uploads.
 
 ``--kernels {pallas,ref,auto}`` selects the kernel backend for every path
 (the sequential jit traces under it, the engine lowers its bucketed
@@ -16,6 +28,7 @@ the serve CLI does.
 
     PYTHONPATH=src python -m benchmarks.serving [--n 16] [--mem-budget-mb 96]
     PYTHONPATH=src python -m benchmarks.serving --kernels pallas
+    PYTHONPATH=src python -m benchmarks.serving --inflight-depth 3
 """
 from __future__ import annotations
 
@@ -24,6 +37,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import reduce_ppm_config
@@ -34,6 +48,20 @@ from repro.launch.serve import priority_tiers
 from repro.models.ppm import init_ppm, ppm_forward
 from repro.serving import (EngineMetrics, FoldEngine, make_serving_mesh,
                            pad_to_bucket, parse_buckets)
+
+
+def _warn_if_slower(name: str, ratio: float) -> None:
+    """A batching engine slower than the naive sequential loop is a
+    regression that must be impossible to miss in the bench output."""
+    if ratio >= 1.0:
+        return
+    bar = "!" * 72
+    print(f"# {bar}\n"
+          f"# WARNING: the {name} path is SLOWER than the sequential "
+          f"baseline\n"
+          f"# WARNING: throughput ratio {ratio:.2f}x < 1.0 — the batching "
+          f"machinery is a net loss on this trace\n"
+          f"# {bar}", flush=True)
 
 
 def _trace(n: int, min_len: int, max_len: int):
@@ -91,6 +119,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--shard-threshold", type=int, default=None)
     ap.add_argument("--priority-split", type=float, default=0.25)
     ap.add_argument("--deadline-s", type=float, default=None)
+    ap.add_argument("--inflight-depth", type=int, default=2)
+    ap.add_argument("--batch-linger-ms", type=float, default=0.0)
     ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
                     default=dispatch.AUTO)
     args = ap.parse_args(argv)
@@ -128,20 +158,25 @@ def main(argv=None) -> dict:
                         max_batch=args.max_batch,
                         mem_budget_mb=args.mem_budget_mb, fidelity=False,
                         kernels=args.kernels, mesh=mesh,
-                        shard_threshold=args.shard_threshold)
+                        shard_threshold=args.shard_threshold,
+                        inflight_depth=args.inflight_depth,
+                        linger_ms=args.batch_linger_ms)
     eng_cold, _ = bench_engine(engine, seqs)
     compiles_after_cold = engine.compile_count
     eng_warm, results = bench_engine(engine, seqs)
     assert engine.compile_count == compiles_after_cold, "steady state recompiled"
     eng_summary = engine.metrics.summary()
+    eng_ratio = seq_warm / eng_warm
     emit("serving.engine.cold", eng_cold * 1e6,
          f"{len(seqs) / eng_cold:.2f}req/s {tokens / eng_cold:.1f}tok/s "
          f"compiles={compiles_after_cold} kernels={backend}")
     emit("serving.engine.warm", eng_warm * 1e6,
          f"{len(seqs) / eng_warm:.2f}req/s {tokens / eng_warm:.1f}tok/s "
-         f"speedup_vs_seq={seq_warm / eng_warm:.2f}x "
+         f"speedup_vs_seq={eng_ratio:.2f}x "
+         f"occupancy={eng_summary['pipeline']['mean_batch_occupancy']:.3f} "
          f"p99_wait_ms={eng_summary['queue_wait_ms']['p99']:.1f} "
          f"p99_run_ms={eng_summary['run_ms']['p99']:.1f}")
+    _warn_if_slower("engine", eng_ratio)
 
     # the handle-based client path on the SAME core (warm executables):
     # measures lifecycle overhead (handles, events, priority scheduling)
@@ -152,11 +187,33 @@ def main(argv=None) -> dict:
                                          args.deadline_s)
     assert engine.compile_count == compiles_after_cold, "client recompiled"
     cli_summary = client.metrics.summary()
+    cli_ratio = seq_warm / cli_warm
     emit("serving.client.warm", cli_warm * 1e6,
          f"{len(seqs) / cli_warm:.2f}req/s {tokens / cli_warm:.1f}tok/s "
+         f"speedup_vs_seq={cli_ratio:.2f}x "
          f"overhead_vs_engine={cli_warm / eng_warm:.3f}x "
+         f"occupancy={cli_summary['pipeline']['mean_batch_occupancy']:.3f} "
          f"p99_wait_ms={cli_summary['queue_wait_ms']['p99']:.1f} "
          f"expired={cli_summary['expired']}")
+    _warn_if_slower("client", cli_ratio)
+
+    # hard numerics contract: the pipelined run must be bitwise identical
+    # to a depth-1 synchronous pump over the same warm executables, with
+    # compile_count unchanged across depths
+    depth = engine.core.inflight_depth
+    engine.core.inflight_depth = 1
+    d1_warm, d1_results = bench_client(client, seqs, tiers, args.deadline_s)
+    engine.core.inflight_depth = depth
+    assert engine.compile_count == compiles_after_cold, \
+        "depth-1 re-run recompiled: launch shapes depend on depth"
+    for piped, sync in zip(cli_results, d1_results):
+        np.testing.assert_array_equal(piped.coords, sync.coords)
+        np.testing.assert_array_equal(np.asarray(piped.distogram),
+                                      np.asarray(sync.distogram))
+    emit("serving.pipeline.depth_parity", 0.0,
+         f"depth{depth}-vs-depth1 bitwise-identical "
+         f"compiles={engine.compile_count} "
+         f"depth1_warm={d1_warm:.3f}s depth{depth}_warm={cli_warm:.3f}s")
 
     served = [r for r in results if r.ok]
     peak = max((r.est_activation_bytes for r in served), default=0)
@@ -178,16 +235,29 @@ def main(argv=None) -> dict:
         "placements": sorted({r.placement for r in served}),
         "priority_split": args.priority_split,
         "deadline_s": args.deadline_s,
+        "compiles": engine.compile_count,
         "sequential": {"warm_s": seq_warm,
                        "req_per_s": len(seqs) / seq_warm},
         "engine": {"warm_s": eng_warm, "req_per_s": len(seqs) / eng_warm,
+                   "ratio_vs_sequential": eng_ratio,
+                   "mean_batch_occupancy":
+                       eng_summary["pipeline"]["mean_batch_occupancy"],
                    "queue_wait_ms": eng_summary["queue_wait_ms"],
                    "run_ms": eng_summary["run_ms"]},
         "client": {"warm_s": cli_warm, "req_per_s": len(seqs) / cli_warm,
+                   "ratio_vs_sequential": cli_ratio,
+                   "mean_batch_occupancy":
+                       cli_summary["pipeline"]["mean_batch_occupancy"],
                    "queue_wait_ms": cli_summary["queue_wait_ms"],
                    "run_ms": cli_summary["run_ms"],
                    "served": cli_summary["served"],
                    "expired": cli_summary["expired"]},
+        "pipeline": {"inflight_depth": args.inflight_depth,
+                     "max_inflight": cli_summary["pipeline"]["max_inflight"],
+                     "linger_ms": args.batch_linger_ms,
+                     "depth1_warm_s": d1_warm,
+                     "bitwise_identical_to_depth1": True,
+                     "compiles_unchanged_across_depths": True},
         "admission": {"peak_est_mb": peak / 1e6,
                       "budget_mb": args.mem_budget_mb},
     }

@@ -139,7 +139,10 @@ def describe(backend: str | None = None, *, seq: int | None = None,
     MIN_QMM_TOKENS.  When the two resolutions agree the label stays
     ``auto:<backend>``; when they split it reports both —
     ``auto:attn=<a>,qmm=<q>`` — instead of letting the attention floor
-    speak for matmuls that actually run the other path.
+    speak for matmuls that actually run the other path.  With only
+    ``qmm_tokens`` given there is no attention shape to resolve against,
+    so the attention half is honestly unknown — ``auto:attn=?;qmm=<q>`` —
+    rather than a capability-only guess claiming pallas for attention.
     """
     mode = _check(backend) if backend is not None else _MODE
     interp = interpret_mode()
@@ -152,9 +155,10 @@ def describe(backend: str | None = None, *, seq: int | None = None,
             return f"auto:{tag(_resolve(AUTO, True))}"
         if qmm_tokens is None:
             qmm_tokens = seq * seq
-        attn = (resolve_attention(seq, seq, backend=AUTO)
-                if seq is not None else _resolve(AUTO, True))
         qmm = resolve_matmul(qmm_tokens, backend=AUTO)
+        if seq is None:
+            return f"auto:attn=?;qmm={tag(qmm)}"
+        attn = resolve_attention(seq, seq, backend=AUTO)
         if attn == qmm:
             return f"auto:{tag(attn)}"
         return f"auto:attn={tag(attn)};qmm={tag(qmm)}"

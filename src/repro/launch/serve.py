@@ -5,11 +5,13 @@ Two services:
     ``FoldClient`` (repro.serving): ``submit()`` returns handles with
     priorities (``--priority-split``) and deadlines (``--deadline-s``),
     progress streams as typed events, and batches run on the bucketed
-    ``EngineCore`` (one executable per (bucket, scheme), token-budget
-    batching, AAQ-aware admission control) driven by a background thread
-    (``--driver thread``) or the inline pump.  ``--no-engine`` keeps the
-    one-request-at-a-time fallback (same bucket padding, so both paths
-    produce bitwise-identical real-token coords).
+    ``EngineCore`` — a dispatch/retire pipeline over a bounded in-flight
+    ring (``--inflight-depth``), occupancy-fitted launch sizes, lazy
+    distogram transfer, token-budget batching with fill-or-timeout
+    (``--batch-linger-ms``), and AAQ-aware admission control — driven by
+    a background thread (``--driver thread``) or the inline pump.
+    ``--no-engine`` keeps the one-request-at-a-time fallback (same bucket
+    padding, so both paths produce bitwise-identical real-token coords).
   * ``--mode lm``   — batched token serving for any zoo arch: prefill once,
     then steady-state decode with the ring KV cache (AAQ-on-KV optional).
 
@@ -123,7 +125,9 @@ def serve_ppm(args):
         max_tokens_per_batch=args.max_tokens_per_batch,
         max_batch=args.max_batch, mem_budget_mb=args.mem_budget_mb,
         fidelity=not args.no_fidelity, kernels=args.kernels,
-        mesh=mesh, shard_threshold=args.shard_threshold)
+        mesh=mesh, shard_threshold=args.shard_threshold,
+        inflight_depth=args.inflight_depth,
+        linger_ms=args.batch_linger_ms)
     if args.warmup:
         client.warmup()
     tiers = priority_tiers(len(seqs), args.priority_split)
@@ -160,6 +164,11 @@ def serve_ppm(args):
           f"p99={s['queue_wait_ms']['p99']:.1f} "
           f"| run_ms p50={s['run_ms']['p50']:.1f} "
           f"p95={s['run_ms']['p95']:.1f} p99={s['run_ms']['p99']:.1f}")
+    p = s["pipeline"]
+    print(f"# pipeline inflight_depth={p['inflight_depth']} "
+          f"max_inflight={p['max_inflight']} batches={p['batches']} "
+          f"mean_occupancy={p['mean_batch_occupancy']:.3f} "
+          f"linger_ms={p['linger_ms']:.0f} linger_holds={p['linger_holds']}")
     for b in s["buckets"]:
         print(f"# bucket={b['bucket']} n={b['requests']} "
               f"compiles={b['compiles']} wait_ms={b['mean_queue_wait_ms']:.1f} "
@@ -231,7 +240,18 @@ def main(argv=None):
                          "model axis; smaller buckets stay single-device "
                          "(requires --mesh)")
     ap.add_argument("--warmup", action="store_true",
-                    help="pre-compile every bucket before serving")
+                    help="pre-compile every bucket at its launch cap; "
+                         "occupancy-fitted sizes below the cap still "
+                         "compile on their first appearance")
+    ap.add_argument("--inflight-depth", type=int, default=2,
+                    help="bounded dispatch/retire pipeline depth: batches "
+                         "launched but not yet retired (1 = synchronous; "
+                         "results are bitwise-identical at any depth)")
+    ap.add_argument("--batch-linger-ms", type=float, default=0.0,
+                    help="fill-or-timeout: hold an underfull batch up to "
+                         "this long past its most urgent arrival so same-"
+                         "bucket requests can fill its dummy rows (0 = "
+                         "launch immediately)")
     ap.add_argument("--priority-split", type=float, default=0.0,
                     help="fraction of requests submitted at priority 1 "
                          "(interleaved); the rest run at priority 0")

@@ -14,7 +14,8 @@ from repro.serving.client import (ADMITTED, CANCELLED, DONE, EXPIRED,
                                   HANDLE_STATES, LEGAL_TRANSITIONS, QUEUED,
                                   REJECTED as HANDLE_REJECTED, RUNNING,
                                   TERMINAL_STATES, FoldClient, FoldHandle)
-from repro.serving.engine import EngineCore, FoldEngine
+from repro.serving.engine import (BatchExecutionError, EngineCore,
+                                  FoldEngine, InFlightBatch)
 from repro.serving.events import (EVENT_KINDS, EVENT_ORDER, TERMINAL_EVENTS,
                                   EventBus, EventStream, FoldEvent,
                                   check_request_order)
@@ -24,9 +25,10 @@ from repro.serving.placement import (SHARDED, SINGLE, Placement,
                                      PlacementPolicy, make_serving_mesh,
                                      parse_mesh_spec)
 from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
-                                     parse_buckets, pow2_buckets)
-from repro.serving.types import (FoldRequest, FoldResult, pad_to_bucket,
-                                 strip_padding)
+                                     parse_buckets, pow2_buckets,
+                                     static_batch_for)
+from repro.serving.types import (BatchDeviceOutput, FoldRequest, FoldResult,
+                                 LazyDistogram, pad_to_bucket)
 
 __all__ = [
     # lifecycle client
@@ -41,8 +43,10 @@ __all__ = [
     "make_serving_mesh", "parse_mesh_spec",
     # engine core + legacy wrapper
     "EngineCore", "FoldEngine", "FoldRequest", "FoldResult",
+    "InFlightBatch", "BatchExecutionError", "LazyDistogram",
+    "BatchDeviceOutput",
     "AdmissionController", "AdmissionDecision", "ADMIT", "DEFER", "REJECT",
     "TokenBudgetScheduler", "ScheduledBatch", "pow2_buckets", "parse_buckets",
-    "EngineMetrics", "CompileWatcher", "CSV_HEADER", "csv_row", "percentiles",
-    "pad_to_bucket", "strip_padding",
+    "static_batch_for", "EngineMetrics", "CompileWatcher", "CSV_HEADER",
+    "csv_row", "percentiles", "pad_to_bucket",
 ]

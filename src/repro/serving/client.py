@@ -6,6 +6,24 @@ threadless, what tests and the legacy ``FoldEngine`` wrapper use) or on the
 background driver thread (``start()``/``stop()`` — what a server uses so
 ``submit``/``result`` are fully async).
 
+The pump is PIPELINED: each ``drive`` turn first fills the core's bounded
+in-flight ring (``inflight_depth``) with freshly formed batches —
+``core.dispatch`` pads, device-puts, and launches without blocking — and
+then retires the oldest in-flight batch (``core.retire``).  While batch *k*
+computes on device, batch *k+1* is padded/launched and batch *k-1*'s
+results are stripped and delivered.  Event order stays legal per request
+(``check_request_order``): a later batch's BATCH_START may interleave
+between an earlier batch's BATCH_START and BATCH_DONE, which the per-
+request contract permits.  Results are bitwise-identical to a depth-1
+synchronous pump — the ring changes overlap, never inputs or executables.
+
+Fill-or-timeout: with ``linger_ms`` set, the scheduler may *hold* an
+underfull batch briefly so same-bucket arrivals fill its would-be dummy
+rows.  A draining pump (``drive()`` with no ``max_batches`` bound — the
+legacy ``run()``/``drain()``/``stop()`` paths) bypasses holds: it is the
+last pumper, so no arrivals can come.  The background driver honors holds
+and re-polls, so lingering only ever happens where filling is possible.
+
 Handle lifecycle (the only legal transitions)::
 
     QUEUED ──► ADMITTED ──► RUNNING ──► DONE
@@ -31,12 +49,13 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from typing import Callable, Iterable
 
 import numpy as np
 
 from repro.serving import events as ev
-from repro.serving.engine import EngineCore
+from repro.serving.engine import BatchExecutionError, EngineCore
 from repro.serving.metrics import EngineMetrics
 from repro.serving.scheduler import ScheduledBatch, TokenBudgetScheduler
 from repro.serving.types import (CANCELLED as R_CANCELLED, EXPIRED as
@@ -149,6 +168,7 @@ class FoldClient:
                  mem_budget_mb: float | None = None, fidelity: bool = False,
                  kernels: str | None = None, keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
+                 inflight_depth: int = 2, linger_ms: float = 0.0,
                  clock: Callable[[], float] = time.monotonic,
                  core: EngineCore | None = None):
         if core is None:
@@ -160,13 +180,18 @@ class FoldClient:
                 fidelity=fidelity,
                 kernels=dispatch.AUTO if kernels is None else kernels,
                 keep_distogram=keep_distogram, mesh=mesh,
-                shard_threshold=shard_threshold, clock=clock)
+                shard_threshold=shard_threshold,
+                inflight_depth=inflight_depth, clock=clock)
         self.core = core
         self.clock = core.clock
         self.scheduler = TokenBudgetScheduler(
             core.buckets, max_tokens_per_batch=core.max_tokens_per_batch,
             max_batch=core.max_batch, admission=core.admission,
-            placement=core.placement)
+            placement=core.placement, linger_ms=linger_ms)
+        # the pump's own FIFO mirror of dispatched-not-retired batches: the
+        # client terminates handles from THIS deque, so a retire failure
+        # (or a monkeypatched core) can never desync results from handles
+        self._inflight_batches: deque[ScheduledBatch] = deque()
         self.events = ev.EventBus(clock=self.clock)
         # live (non-terminal) requests only: handles unindex on reaching a
         # terminal state so a long-running server's memory is bounded by
@@ -299,7 +324,17 @@ class FoldClient:
         return out
 
     # -- the pump ---------------------------------------------------------
-    def _form_batch(self) -> tuple[ScheduledBatch | None, list[FoldResult]]:
+    def _expire_now(self) -> list[FoldResult]:
+        """Deadline sweep without batch formation — keeps expiry timely
+        while the in-flight ring is full."""
+        try:
+            with self._lock:
+                return self._expire_due(self.clock())
+        finally:
+            self.events.dispatch()
+
+    def _form_batch(self, *, allow_linger: bool = True,
+                    ) -> tuple[ScheduledBatch | None, list[FoldResult]]:
         """One scheduling turn: expire, pick, mark RUNNING.  Events are
         sequenced under the lock (order = lifecycle order), callbacks
         dispatched after it releases."""
@@ -307,7 +342,10 @@ class FoldClient:
             with self._lock:
                 now = self.clock()
                 expired = self._expire_due(now)
-                batch = self.scheduler.next_batch()
+                batch = self.scheduler.next_batch(now,
+                                                  allow_linger=allow_linger)
+                self.core.metrics.record_linger(self.scheduler.linger_holds,
+                                                self.scheduler.linger_ms)
                 if batch is None or not batch.requests:
                     return None, expired
                 if batch.deferred:
@@ -355,33 +393,82 @@ class FoldClient:
             self._cond.notify_all()
         self.events.dispatch()
 
+    def _failed_results(self, batch: ScheduledBatch,
+                        e: BaseException) -> list[FoldResult]:
+        """A failed batch must still terminate its handles — RUNNING
+        forever would hang every result() waiter."""
+        results = [FoldResult(
+            request_id=r.request_id, length=r.length,
+            status=R_FAILED, priority=r.priority,
+            reason=f"batch execution failed: {e!r}",
+            bucket=batch.bucket, batch_size=len(batch.requests),
+            placement=batch.placement)
+            for r in batch.requests]
+        for res in results:
+            self.core.metrics.record(res)
+        return results
+
+    def _dispatch_batch(self, batch: ScheduledBatch) -> list[FoldResult]:
+        """Launch a batch onto the in-flight ring.  Returns [] on success;
+        on a dispatch failure (compile/launch error) the batch's handles
+        terminate FAILED and their results are returned."""
+        try:
+            self.core.dispatch(batch)
+        except Exception as e:
+            results = self._failed_results(batch, e)
+            self._finish_batch(batch, results)
+            return results
+        self._inflight_batches.append(batch)
+        return []
+
+    def _retire_oldest(self) -> list[FoldResult]:
+        """Block on the oldest in-flight batch and deliver its results
+        (FAILED ones included — an execution error terminates the batch's
+        handles, never strands them)."""
+        if not self._inflight_batches:
+            return []
+        batch = self._inflight_batches.popleft()
+        try:
+            results = self.core.retire()
+        except BatchExecutionError as e:
+            results = self._failed_results(e.batch, e.cause)
+            batch = e.batch
+        except Exception as e:      # a core that died before popping its
+            results = self._failed_results(batch, e)   # ring entry: fail
+        self._finish_batch(batch, results)             # OUR oldest batch
+        return results
+
     def drive(self, max_batches: int | None = None) -> list[FoldResult]:
-        """Inline pump: serve batches until the queue is empty (or
-        ``max_batches``).  Returns every result that became terminal during
-        the call (served + expired), in completion order."""
+        """Inline pump: serve batches until the queue AND the in-flight
+        ring are empty (or until ``max_batches`` batches have retired).
+        Each turn fills the ring — dispatching up to ``inflight_depth``
+        batches without blocking — then retires the oldest.  Returns every
+        result that became terminal during the call (served + failed +
+        expired), in completion order.
+
+        An UNBOUNDED drive is a drain (the legacy ``run``/``drain``/
+        ``stop`` surfaces): it bypasses scheduler linger holds, because no
+        future arrivals can fill an underfull batch it is the last one to
+        serve.  A bounded drive (the background driver's ``max_batches=1``
+        turns) honors holds and simply returns; the driver re-polls after
+        the hold releases."""
+        draining = max_batches is None
         out: list[FoldResult] = []
         n = 0
         while max_batches is None or n < max_batches:
-            batch, expired = self._form_batch()
-            out.extend(expired)
-            if batch is None:
-                break
-            try:
-                results = self.core.execute(batch)   # off the lock: the slow
-            except Exception as e:                   # part; a failed batch
-                # must still terminate its handles — RUNNING forever would
-                # hang every result() waiter
-                results = [FoldResult(
-                    request_id=r.request_id, length=r.length,
-                    status=R_FAILED, priority=r.priority,
-                    reason=f"batch execution failed: {e!r}",
-                    bucket=batch.bucket, batch_size=len(batch.requests),
-                    placement=batch.placement)
-                    for r in batch.requests]
-                for res in results:
-                    self.core.metrics.record(res)
-            self._finish_batch(batch, results)
-            out.extend(results)
+            while not self.core.inflight_full:
+                batch, expired = self._form_batch(allow_linger=not draining)
+                out.extend(expired)
+                if batch is None:
+                    break
+                out.extend(self._dispatch_batch(batch))
+            else:
+                # ring full: still sweep deadlines so expiry can't slip by
+                # a whole batch worth of compute
+                out.extend(self._expire_now())
+            if not self._inflight_batches:
+                break           # idle, or everything is lingering
+            out.extend(self._retire_oldest())
             n += 1
         return out
 

@@ -1,4 +1,5 @@
-"""EngineCore: bucketed-compilation batch executor for PPM serving.
+"""EngineCore: pipelined bucketed-compilation batch executor for PPM
+serving.
 
 The core owns (params, config, scheme) plus the compiled-executable cache
 and executes ``ScheduledBatch``es; it has no queue and no policy.  Request
@@ -7,18 +8,42 @@ in ``repro.serving.client.FoldClient``, whose pump loop drives this core.
 ``FoldEngine`` (bottom of this module) is the legacy ``submit/step/run``
 surface, kept as a thin compatibility wrapper over a client.
 
+Execution is a two-stage ``dispatch()``/``retire()`` pipeline over a
+bounded in-flight ring (``inflight_depth``, default 2):
+
+  * ``dispatch(batch)`` resolves the executable (compiling on a cold
+    bucket), pads on the host, puts inputs on device, and *launches*
+    without blocking — JAX dispatch is async, so the call returns while
+    the device computes.  The fidelity FP re-run is launched async here
+    too, instead of serializing after the main forward.
+  * ``retire()`` blocks on the OLDEST in-flight batch, performs one host
+    transfer of its coords, and hands each request a *lazy* distogram
+    handle (``LazyDistogram``) — for long sequences the B x N x N x bins
+    distogram is the peak host-memory term, so it is fetched only when a
+    consumer asks.
+
+While batch *k* computes on device, batch *k+1*'s padding/device-put and
+batch *k-1*'s stripping run on the host.  ``execute()`` remains as the
+synchronous composition (dispatch + immediate retire; requires an empty
+ring) and is bitwise-identical to the pipelined path — same executables,
+same padded inputs, in the same order.
+
 Core responsibilities:
 
   * length buckets — every request is right-padded to its bucket edge, so
     the XLA shape space is the bucket set, not the set of observed lengths;
-  * a compiled-executable cache keyed by ``(bucket, scheme)`` — each bucket
-    runs at ONE static batch size (``batch_for_bucket``: token budget,
-    max-batch cap, and the admission controller's memory cap), short
-    batches are padded with fully-masked dummy rows, so steady-state
-    serving performs zero recompilations.  Executables are lowered under
-    the core's kernel backend (``kernels=``, the ``--kernels`` flag):
-    Pallas flash/AAQ kernels or the XLA refs — each served batch records
-    which backend it ran;
+  * a compiled-executable cache keyed by ``(bucket, launch_batch, scheme,
+    placement)``.  ``batch_for_bucket`` (token budget, max-batch cap, and
+    the admission controller's memory cap) is the launch-size CAP; each
+    batch launches at its occupancy fit — the real request count, or a
+    slightly larger already-compiled size when the extra dummy rows are
+    cheaper than a fresh multi-second compile (waste guard: at most
+    ``max(1, n // 2)`` dummy rows).  The size space is finite and
+    trace-determined, so steady-state serving still performs zero
+    recompilations.  Executables are lowered under the core's kernel
+    backend (``kernels=``, the ``--kernels`` flag): Pallas flash/AAQ
+    kernels or the XLA refs — each served batch records which backend it
+    ran;
   * the AAQ-aware admission controller (repro.serving.admission) pricing
     every (bucket, batch) candidate in peak activation bytes — *per device*
     when the bucket is mesh-sharded;
@@ -33,9 +58,22 @@ Numerics contract: padding is non-rescaling masking end to end (see
 ``ppm_forward``), so a request served from a padded batch yields coords
 bitwise identical to the same request padded to the same bucket at batch 1
 — which is exactly what the fixed sequential fallback computes, and why the
-client/legacy paths agree bitwise however their batches are composed.
-Fidelity (``tm_vs_fp``) re-runs each batch through the cached FP16-baseline
-executable of the same bucket and TM-scores real-token coords per request.
+client/legacy paths agree bitwise however their batches are composed OR
+pipelined (in-flight depth changes overlap, never inputs).  Fidelity
+(``tm_vs_fp``) re-runs each batch through the cached FP16-baseline
+executable of the same (bucket, launch size) and TM-scores real-token
+coords per request.
+
+Telemetry accounting: ``batch_start`` (the end of queue wait) is stamped
+AFTER the executable is resolved, so a cold bucket's multi-second compile
+lands in ``queue_wait_ms`` (the request really was waiting on it) and in
+its own ``compile_ms`` column — never in ``run_ms``, whose p95/p99
+percentiles stay clean on cold starts.  ``run_ms`` is launch-to-ready
+device wall time; with ``inflight_depth > 1`` it includes time queued
+behind the previous in-flight batch, and in a cold window it can span a
+NEIGHBOR batch's host-side compile (the device computes on while the host
+compiles, so launch-to-ready is still the honest measure; each batch's
+own compile is always isolated in its own ``compile_ms``).
 
 Clock: ``clock`` (default ``time.monotonic``) stamps batch starts on the
 same monotonic clock the client stamps arrivals/deadlines with, so
@@ -44,9 +82,11 @@ used only for *durations* (compile/run).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import deque
 from functools import partial
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -60,8 +100,37 @@ from repro.serving.admission import AdmissionController
 from repro.serving.metrics import EngineMetrics
 from repro.serving.placement import (PlacementPolicy, lower_sharded,
                                      place_inputs)
-from repro.serving.scheduler import ScheduledBatch
-from repro.serving.types import (FoldResult, pad_to_bucket, strip_padding)
+from repro.serving.scheduler import ScheduledBatch, static_batch_for
+from repro.serving.types import (BatchDeviceOutput, FoldResult,
+                                 LazyDistogram, pad_to_bucket)
+
+
+class BatchExecutionError(RuntimeError):
+    """Raised by ``retire()``/``execute()`` when a launched batch fails;
+    carries the ``ScheduledBatch`` so the pump can terminate its handles
+    (FAILED results) instead of stranding them RUNNING forever."""
+
+    def __init__(self, batch: ScheduledBatch, cause: BaseException):
+        super().__init__(f"batch execution failed: {cause!r}")
+        self.batch = batch
+        self.cause = cause
+
+
+@dataclasses.dataclass
+class InFlightBatch:
+    """One dispatched-but-not-retired batch riding the in-flight ring."""
+    batch: ScheduledBatch
+    bucket: int
+    launched_b: int                    # rows the executable runs
+    placement: Any
+    out: dict                          # device outputs (unblocked futures)
+    fp_out: dict | None                # async fidelity re-run (or None)
+    compile_s: float
+    batch_start: float                 # core clock, post-executable-resolve
+    t_launch: float                    # perf_counter at launch (run_ms t0)
+    est: int                           # admission price at launched_b
+    backend: str                       # dispatch label
+    occupancy: float                   # real tokens / (launched_b * bucket)
 
 
 class EngineCore:
@@ -72,8 +141,12 @@ class EngineCore:
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
+                 inflight_depth: int = 2,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.scheduler import pow2_buckets
+        if inflight_depth < 1:
+            raise ValueError(f"inflight_depth must be >= 1, "
+                             f"got {inflight_depth}")
         self.params = params
         self.cfg = cfg
         if scheme is None:
@@ -100,9 +173,12 @@ class EngineCore:
         self.admission = AdmissionController(
             cfg, self.scheme, budget, chunked_len=CHUNKED_ATTN_LEN,
             shards_for=self.placement.shards_for)
+        self.inflight_depth = inflight_depth
+        self._inflight: deque[InFlightBatch] = deque()
         self.metrics = EngineMetrics()
         self._fp_scheme = FP16Baseline()
-        self._executables: dict[tuple[int, str, str], object] = {}
+        # key: (bucket, launch_batch, scheme.name, placement.label)
+        self._executables: dict[tuple[int, int, str, str], object] = {}
         self._placed_params: dict[str, object] = {}
         self._compile_count = 0
 
@@ -113,10 +189,29 @@ class EngineCore:
         return bucket_for(self.buckets, length)
 
     def batch_for_bucket(self, bucket: int) -> int:
-        """The ONE static batch size this bucket is compiled at."""
-        n = min(self.max_batch, max(1, self.max_tokens_per_batch // bucket))
-        if self.admission.mem_budget_bytes is not None:
-            n = max(1, self.admission.max_batch_for(bucket, n))
+        """The MAX batch size this bucket may launch at (the launch-size
+        cap; actual launches fit the batch's occupancy, see
+        ``launch_size_for``)."""
+        return static_batch_for(bucket, self.max_tokens_per_batch,
+                                self.max_batch, self.admission)
+
+    def launch_size_for(self, bucket: int, n: int, scheme: QuantScheme,
+                        placement) -> int:
+        """Occupancy-fitted launch size for ``n`` real rows: the exact
+        count, unless a slightly larger executable is already cached for
+        this (bucket, scheme, placement) — reusing it pads at most
+        ``max(1, n // 2)`` dummy rows, which is far cheaper than a fresh
+        multi-second compile for a one-off trailing batch.  Deterministic
+        given the trace (cache evolution is trace-determined), so depth-1
+        and pipelined runs launch identical shapes."""
+        cap = self.batch_for_bucket(bucket)
+        n = min(n, cap)
+        cached = sorted(b for (bk, b, sn, pl) in self._executables
+                        if bk == bucket and sn == scheme.name
+                        and pl == placement.label and b >= n)
+        for b in cached:
+            if b - n <= max(1, n // 2):
+                return b
         return n
 
     # -- executable cache -------------------------------------------------
@@ -124,22 +219,21 @@ class EngineCore:
     def compile_count(self) -> int:
         return self._compile_count
 
-    def _executable(self, bucket: int, scheme: QuantScheme):
-        """AOT-compiled forward for (bucket, scheme, placement); cached,
-        counted.
+    def _executable(self, bucket: int, batch: int, scheme: QuantScheme):
+        """AOT-compiled forward for (bucket, batch, scheme, placement);
+        cached, counted.
 
         Lowered under the core's kernel backend, so a ``kernels='pallas'``
         engine bakes the Pallas flash/AAQ kernels into every bucketed
         executable (interpret mode off-TPU).  The placement label is part
         of the cache key: routing a bucket to the mesh is a distinct
-        executable, and repeated batches of the same (bucket, scheme,
-        placement) never recompile.
+        executable, and repeated batches of the same (bucket, batch,
+        scheme, placement) never recompile.
         """
         placement = self.placement.placement_for(bucket)
-        key = (bucket, scheme.name, placement.label)
+        key = (bucket, batch, scheme.name, placement.label)
         if key in self._executables:
             return self._executables[key], 0.0
-        batch = self.batch_for_bucket(bucket)
         aat = jax.ShapeDtypeStruct((batch, bucket), jnp.int32)
         msk = jax.ShapeDtypeStruct((batch, bucket), jnp.bool_)
         t0 = time.perf_counter()
@@ -170,75 +264,148 @@ class EngineCore:
         return ppm_forward(params, aatype, self.cfg, scheme, mask=mask)
 
     def warmup(self) -> None:
-        """Pre-compile every bucket (and its FP twin if fidelity is on)."""
+        """Pre-compile every bucket at its launch-size cap (and its FP twin
+        if fidelity is on) — the shape saturated traffic runs at.
+        Occupancy-fitted sizes below the cap still compile on their first
+        appearance (each once; the waste guard reuses nearby cached sizes
+        for trailing batches)."""
         for bucket in self.buckets:
-            self._executable(bucket, self.scheme)
+            cap = self.batch_for_bucket(bucket)
+            self._executable(bucket, cap, self.scheme)
             if self.fidelity:
-                self._executable(bucket, self._fp_scheme)
+                self._executable(bucket, cap, self._fp_scheme)
 
-    # -- execution --------------------------------------------------------
-    def execute(self, batch: ScheduledBatch) -> list[FoldResult]:
-        """Run one scheduled batch to FoldResults (recorded in metrics)."""
+    # -- pipelined execution ----------------------------------------------
+    @property
+    def inflight_count(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def inflight_full(self) -> bool:
+        return len(self._inflight) >= self.inflight_depth
+
+    def dispatch(self, batch: ScheduledBatch) -> InFlightBatch:
+        """Stage 1: resolve executables, pad, device-put, LAUNCH — without
+        blocking on the result.  Raises RuntimeError when the in-flight
+        ring is full (``retire()`` first) and propagates compile/launch
+        errors to the caller (the pump turns them into FAILED results).
+        """
+        if self.inflight_full:
+            raise RuntimeError(
+                f"in-flight ring full ({self.inflight_depth}); retire() "
+                f"the oldest batch before dispatching another")
         bucket = batch.bucket
-        static_b = self.batch_for_bucket(bucket)
         placement = self.placement.placement_for(bucket)
-        est = self.admission.estimate_bytes(bucket, static_b)
-        batch_start = self.clock()        # queue wait ends here: compile and
-        compiled, compile_s = self._executable(bucket, self.scheme)  # run are
-        aat, mask = pad_to_bucket([r.aatype for r in batch.requests],  # their
-                                  bucket, static_b)                 # own cols
+        launched_b = self.launch_size_for(bucket, len(batch.requests),
+                                          self.scheme, placement)
+        compiled, compile_s = self._executable(bucket, launched_b,
+                                               self.scheme)
+        fp_exec = None
+        if self.fidelity and self.scheme.name != self._fp_scheme.name:
+            fp_exec, fp_compile_s = self._executable(bucket, launched_b,
+                                                     self._fp_scheme)
+            compile_s += fp_compile_s
+        # queue wait ends HERE, after executables resolve: a cold bucket's
+        # multi-second compile is queue time for the requests waiting on it
+        # (and its own compile_ms column) — never part of run_ms
+        batch_start = self.clock()
+        aat, mask = pad_to_bucket([r.aatype for r in batch.requests],
+                                  bucket, launched_b)
         aat_j, mask_j = jnp.asarray(aat), jnp.asarray(mask)
         params = self._params_for(placement)
         if placement.sharded:
             # AOT executables demand inputs matching their lowered shardings
             aat_j, mask_j = place_inputs(placement, aat_j, mask_j)
-        t_run = time.perf_counter()
-        out = compiled(params, aat_j, mask_j)
-        jax.block_until_ready(out["coords"])
-        run_s = time.perf_counter() - t_run
+        real_tokens = sum(r.length for r in batch.requests)
+        t_launch = time.perf_counter()
+        out = compiled(params, aat_j, mask_j)        # async: no block here
+        # the fidelity re-run launches behind the main forward on the same
+        # device stream — it overlaps host-side work instead of waiting for
+        # the main batch's transfer like the synchronous path used to
+        fp_out = None if fp_exec is None else fp_exec(params, aat_j, mask_j)
+        flight = InFlightBatch(
+            batch=batch, bucket=bucket, launched_b=launched_b,
+            placement=placement, out=out, fp_out=fp_out,
+            compile_s=compile_s, batch_start=batch_start,
+            t_launch=t_launch,
+            est=self.admission.estimate_bytes(bucket, launched_b),
+            backend=dispatch.describe(
+                self.kernels, seq=bucket,
+                # both auto-mode floors, at the pair-dataflow token count
+                # the launched executable actually flattens
+                qmm_tokens=launched_b * bucket * bucket),
+            occupancy=real_tokens / (launched_b * bucket))
+        self._inflight.append(flight)
+        self.metrics.record_dispatch(len(self._inflight),
+                                     self.inflight_depth, flight.occupancy)
+        return flight
 
-        # one device->host transfer per batch; numpy slicing after that (a
-        # device-array slice would eagerly compile per distinct length and
-        # break the zero-recompile steady state)
-        host = {"coords": np.asarray(out["coords"])}
-        if self.keep_distogram:
-            host["distogram"] = np.asarray(out["distogram"])
-        fp_coords = None
-        if self.fidelity and self.scheme.name != self._fp_scheme.name:
-            fp_exec, fp_compile_s = self._executable(bucket, self._fp_scheme)
-            compile_s += fp_compile_s
-            fp_out = fp_exec(params, aat_j, mask_j)
-            fp_coords = np.asarray(fp_out["coords"])
-
-        # label both auto-mode resolutions honestly: the attention floor at
-        # this bucket's seq length AND the AAQ-matmul floor at the pair-
-        # dataflow token count the bucketed executable actually flattens
-        backend = dispatch.describe(self.kernels, seq=bucket,
-                                    qmm_tokens=static_b * bucket * bucket)
+    def retire(self) -> list[FoldResult]:
+        """Stage 2: block on the OLDEST in-flight batch, one host transfer
+        of its coords, lazy distogram handles, fidelity TM scores, and
+        FoldResults (recorded in metrics).  Returns [] when nothing is in
+        flight; raises ``BatchExecutionError`` (carrying the batch) when
+        the launched computation fails.
+        """
+        if not self._inflight:
+            return []
+        flight = self._inflight.popleft()
+        batch = flight.batch
+        try:
+            jax.block_until_ready(flight.out["coords"])
+            run_s = time.perf_counter() - flight.t_launch
+            # one device->host transfer per batch for coords; numpy slicing
+            # after that (a device-array slice would eagerly compile per
+            # distinct length and break the zero-recompile steady state).
+            # The distogram — the peak host-memory term at long N — stays
+            # on device behind a shared BatchDeviceOutput until a consumer
+            # asks a LazyDistogram for it.
+            coords_host = np.asarray(flight.out["coords"])
+            disto = (BatchDeviceOutput(flight.out["distogram"])
+                     if self.keep_distogram else None)
+            fp_coords = (None if flight.fp_out is None
+                         else np.asarray(flight.fp_out["coords"]))
+        except Exception as e:
+            raise BatchExecutionError(batch, e) from e
         results = []
         for row, req in enumerate(batch.requests):
-            stripped = strip_padding(host, row, req.length)
+            coords = np.array(coords_host[row, :req.length])
             tm = None
             if self.fidelity:
                 tm = 1.0 if fp_coords is None else float(tm_score(
-                    jnp.asarray(stripped["coords"]),
+                    jnp.asarray(coords),
                     jnp.asarray(fp_coords[row, :req.length])))
             results.append(FoldResult(
                 request_id=req.request_id, length=req.length,
-                bucket=bucket, batch_size=len(batch.requests),
-                coords=stripped["coords"],
-                distogram=stripped["distogram"],
+                bucket=flight.bucket, batch_size=len(batch.requests),
+                coords=coords,
+                distogram=None if disto is None else LazyDistogram(
+                    disto, row, req.length,
+                    int(flight.out["distogram"].shape[-1])),
                 tm_vs_fp=tm,
                 priority=req.priority,
-                queue_wait_ms=(batch_start - req.arrival_time) * 1e3,
-                compile_ms=compile_s * 1e3,
+                queue_wait_ms=(flight.batch_start - req.arrival_time) * 1e3,
+                compile_ms=flight.compile_s * 1e3,
                 run_ms=run_s * 1e3,
-                est_activation_bytes=est,
-                kernel_backend=backend,
-                placement=placement.label))
+                launched_batch=flight.launched_b,
+                occupancy=flight.occupancy,
+                est_activation_bytes=flight.est,
+                kernel_backend=flight.backend,
+                placement=flight.placement.label))
         for r in results:
             self.metrics.record(r)
         return results
+
+    def execute(self, batch: ScheduledBatch) -> list[FoldResult]:
+        """Synchronous compat surface: dispatch + immediately retire.
+        Requires an empty in-flight ring (it would otherwise retire an
+        OLDER batch's results as this one's)."""
+        if self._inflight:
+            raise RuntimeError(
+                "execute() needs an empty in-flight ring; use "
+                "dispatch()/retire() when pipelining")
+        self.dispatch(batch)
+        return self.retire()
 
 
 class FoldEngine:
@@ -258,6 +425,7 @@ class FoldEngine:
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
+                 inflight_depth: int = 2, linger_ms: float = 0.0,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.client import FoldClient
         self.client = FoldClient(
@@ -265,7 +433,8 @@ class FoldEngine:
             max_tokens_per_batch=max_tokens_per_batch, max_batch=max_batch,
             mem_budget_mb=mem_budget_mb, fidelity=fidelity, kernels=kernels,
             keep_distogram=keep_distogram, mesh=mesh,
-            shard_threshold=shard_threshold, clock=clock)
+            shard_threshold=shard_threshold, inflight_depth=inflight_depth,
+            linger_ms=linger_ms, clock=clock)
         self.core = self.client.core
 
     # -- delegated state ---------------------------------------------------

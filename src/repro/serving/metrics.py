@@ -116,8 +116,8 @@ class BucketStats:
 
 
 CSV_HEADER = ("request,len,bucket,batch,status,priority,queue_ms,compile_ms,"
-              "run_ms,tm_vs_fp,padding_frac,est_act_mb,kernel_backend,"
-              "placement")
+              "run_ms,tm_vs_fp,padding_frac,occupancy,est_act_mb,"
+              "kernel_backend,placement")
 
 
 def csv_row(r: FoldResult) -> str:
@@ -125,7 +125,8 @@ def csv_row(r: FoldResult) -> str:
     return (f"{r.request_id},{r.length},{r.bucket},{r.batch_size},{r.status},"
             f"{r.priority},"
             f"{r.queue_wait_ms:.1f},{r.compile_ms:.1f},{r.run_ms:.1f},{tm},"
-            f"{r.padding_frac:.3f},{r.est_activation_bytes / 1e6:.1f},"
+            f"{r.padding_frac:.3f},{r.occupancy:.3f},"
+            f"{r.est_activation_bytes / 1e6:.1f},"
             f"{r.kernel_backend},{r.placement}")
 
 
@@ -140,6 +141,12 @@ class EngineMetrics:
         self.results: list[FoldResult] = []
         self._buckets: dict[int, BucketStats] = {}
         self.wall_s: float = 0.0
+        # pipeline + occupancy telemetry (recorded per dispatched batch)
+        self.inflight_depth: int = 0       # configured ring depth
+        self.max_inflight: int = 0         # deepest observed ring
+        self.batch_occupancies: list[float] = []
+        self.linger_ms: float = 0.0        # configured fill-or-timeout
+        self.linger_holds: int = 0         # scheduler hold decisions
         self._lock = threading.Lock()
 
     def record(self, r: FoldResult) -> None:
@@ -179,6 +186,23 @@ class EngineMetrics:
             st.compiles += 1
             st.compile_ms += ms
 
+    def record_dispatch(self, inflight_now: int, depth: int,
+                        occupancy: float) -> None:
+        """Per-batch pipeline telemetry (the engine core calls this on
+        every ``dispatch``): ring depth config + deepest observed ring +
+        the batch's token occupancy."""
+        with self._lock:
+            self.inflight_depth = depth
+            self.max_inflight = max(self.max_inflight, inflight_now)
+            self.batch_occupancies.append(occupancy)
+
+    def record_linger(self, holds: int, linger_ms: float) -> None:
+        """Sync the scheduler's fill-or-timeout counters (idempotent; the
+        client calls this each scheduling turn)."""
+        with self._lock:
+            self.linger_holds = holds
+            self.linger_ms = linger_ms
+
     def summary(self) -> dict:
         with self._lock:       # one consistent snapshot: a racing record()
             # could otherwise resize _buckets mid-iteration
@@ -186,6 +210,16 @@ class EngineMetrics:
             compiles = sum(b.compiles for b in self._buckets.values())
             bucket_dicts = [self._buckets[b].as_dict()
                             for b in sorted(self._buckets)]
+            occs = list(self.batch_occupancies)
+            pipeline = {
+                "inflight_depth": self.inflight_depth,
+                "max_inflight": self.max_inflight,
+                "batches": len(occs),
+                "mean_batch_occupancy": (sum(occs) / len(occs)
+                                         if occs else 0.0),
+                "linger_ms": self.linger_ms,
+                "linger_holds": self.linger_holds,
+            }
         served = [r for r in results if r.ok]
         tokens = sum(r.length for r in served)
         by_status = {s: sum(1 for r in results if r.status == s)
@@ -207,6 +241,7 @@ class EngineMetrics:
             "run_ms": _latency_summary([r.run_ms for r in served]),
             "max_est_act_mb": max(
                 (r.est_activation_bytes for r in served), default=0) / 1e6,
+            "pipeline": pipeline,
             "buckets": bucket_dicts,
         }
         return out
@@ -240,6 +275,8 @@ class EngineMetrics:
             "queue_wait_ms": r.queue_wait_ms, "compile_ms": r.compile_ms,
             "run_ms": r.run_ms, "tm_vs_fp": r.tm_vs_fp,
             "padding_frac": r.padding_frac,
+            "launched_batch": r.launched_batch,
+            "occupancy": r.occupancy,
             "est_activation_bytes": r.est_activation_bytes,
             "kernel_backend": r.kernel_backend,
             "placement": r.placement,

@@ -36,6 +36,14 @@ Request lifecycle hooks (used by the FoldClient pump):
 Continuous batching: ``submit`` may be called at any time, including
 between ``next_batch`` calls — newly arrived requests join the next batch
 of their bucket rather than waiting for a "wave" to finish.
+
+Occupancy (fill-or-timeout): with ``linger_ms`` set, a batch that would
+launch underfull only because its queue drained is held — up to
+``linger_ms`` past its most urgent request's arrival — so same-bucket
+arrivals can fill the rows that would otherwise burn FLOPs as fully-masked
+padding.  Held buckets yield their turn to launchable ones; the pump polls
+again after ``hold_until``.  ``linger_ms=0`` (default) launches
+immediately, the historical behavior.
 """
 from __future__ import annotations
 
@@ -85,6 +93,19 @@ def _urgency(r: FoldRequest) -> tuple[float, float, int]:
     return (-r.priority, r.arrival_time, r.request_id)
 
 
+def static_batch_for(bucket: int, max_tokens_per_batch: int, max_batch: int,
+                     admission: AdmissionController | None = None) -> int:
+    """The MAXIMUM batch size a bucket may launch at: token budget,
+    max-batch cap, and the admission controller's memory cap.  The ONE
+    shape-cap rule — the scheduler's linger policy and the engine core's
+    launch sizing both call this, so "underfull" and "full" can never
+    diverge between them."""
+    n = min(max_batch, max(1, max_tokens_per_batch // bucket))
+    if admission is not None and admission.mem_budget_bytes is not None:
+        n = max(1, admission.max_batch_for(bucket, n))
+    return n
+
+
 @dataclasses.dataclass(frozen=True)
 class ScheduledBatch:
     bucket: int
@@ -110,14 +131,24 @@ class TokenBudgetScheduler:
     def __init__(self, buckets: tuple[int, ...], *,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  admission: AdmissionController | None = None,
-                 placement=None):
+                 placement=None, linger_ms: float = 0.0):
         if not buckets:
             raise ValueError("need at least one bucket edge")
+        if linger_ms < 0:
+            raise ValueError(f"linger_ms must be >= 0, got {linger_ms}")
         self.buckets = tuple(sorted(buckets))
         self.max_tokens_per_batch = max_tokens_per_batch
         self.max_batch = max_batch
         self.admission = admission
         self.placement = placement     # PlacementPolicy (or None = single)
+        # fill-or-timeout: an underfull-because-queue-drained batch is held
+        # up to linger_ms past its most urgent request's arrival, hoping
+        # same-bucket arrivals fill its would-be dummy rows (0 = launch
+        # immediately, the historical behavior)
+        self.linger_ms = linger_ms
+        self.linger_holds = 0          # next_batch turns that held a bucket
+        self.hold_until: float | None = None   # earliest launch time among
+                                               # buckets held this turn
         self._queues: dict[int, deque[FoldRequest]] = {
             b: deque() for b in self.buckets}
         # queued requests by id: O(1) cancellation and the authoritative
@@ -179,16 +210,19 @@ class TokenBudgetScheduler:
         return expired
 
     # -- batch formation --------------------------------------------------
-    def _best_bucket(self) -> int | None:
-        best, best_key = None, None
+    def static_batch_for(self, bucket: int) -> int:
+        """Max launch size for this bucket (shared shape-cap rule)."""
+        return static_batch_for(bucket, self.max_tokens_per_batch,
+                                self.max_batch, self.admission)
+
+    def _buckets_by_urgency(self) -> list[int]:
+        """Non-empty buckets, most urgent waiting request first."""
+        keyed = []
         for bucket, q in self._queues.items():
             keys = [_urgency(r) for r in q if r.request_id in self._live]
-            if not keys:
-                continue
-            key = min(keys)
-            if best_key is None or key < best_key:
-                best, best_key = bucket, key
-        return best
+            if keys:
+                keyed.append((min(keys), bucket))
+        return [b for _, b in sorted(keyed)]
 
     def _grow_stop(self, bucket: int, n: int) -> str | None:
         """Why the batch cannot grow from n to n+1 (None = may grow)."""
@@ -203,30 +237,60 @@ class TokenBudgetScheduler:
                 return "admission"
         return None
 
-    def next_batch(self) -> ScheduledBatch | None:
-        bucket = self._best_bucket()
-        if bucket is None:
-            return None
-        q = sorted((r for r in self._queues[bucket]
-                    if r.request_id in self._live), key=_urgency)
-        picked: list[FoldRequest] = []
-        stop = None
-        while q:
-            stop = self._grow_stop(bucket, len(picked))
-            if stop is not None:
-                break
-            picked.append(q.pop(0))
-        self._queues[bucket] = deque(q)
-        for r in picked:
-            # pop, not del: direct scheduler users may queue duplicate ids
-            # (only FoldClient rejects them eagerly) and both deque entries
-            # are picked here — serve both rather than KeyError mid-batch
-            self._live.pop(r.request_id, None)   # left the queue: cancel -> False
-        est = (self.admission.estimate_bytes(bucket, len(picked))
-               if self.admission is not None else 0)
-        deferred = (tuple(r.request_id for r in q)
-                    if stop == "admission" else ())
-        label = (self.placement.label_for(bucket)
-                 if self.placement is not None else "single")
-        return ScheduledBatch(bucket, tuple(picked), est, deferred,
-                              placement=label)
+    def next_batch(self, now: float | None = None, *,
+                   allow_linger: bool = True) -> ScheduledBatch | None:
+        """Form the most urgent launchable batch (None = nothing to run).
+
+        Fill-or-timeout: with ``linger_ms`` set (and ``now`` given on the
+        client clock), a batch that is underfull only because its bucket's
+        queue drained — not because admission/token-budget/max-batch
+        stopped its growth — is *held* while its most urgent request is
+        younger than the linger budget, so same-bucket arrivals can fill
+        its would-be dummy rows.  A held bucket yields to less urgent
+        launchable buckets (serving other work during the linger beats
+        idling); ``hold_until`` exposes the earliest release time of
+        anything held this turn.  ``allow_linger=False`` bypasses holds —
+        what a draining pump uses, since no future arrivals can fill a
+        batch it is the last one to serve.
+        """
+        self.hold_until = None
+        for bucket in self._buckets_by_urgency():
+            q = sorted((r for r in self._queues[bucket]
+                        if r.request_id in self._live), key=_urgency)
+            picked: list[FoldRequest] = []
+            stop = None
+            while q:
+                stop = self._grow_stop(bucket, len(picked))
+                if stop is not None:
+                    break
+                picked.append(q.pop(0))
+            if (allow_linger and self.linger_ms > 0 and now is not None
+                    and stop is None
+                    and len(picked) < self.static_batch_for(bucket)):
+                # window anchored to the EARLIEST arrival in the batch:
+                # a late high-priority arrival re-sorts picked[0] but must
+                # never extend an older request's wait past its budget
+                release = (min(r.arrival_time for r in picked)
+                           + self.linger_ms / 1e3)
+                if now < release:
+                    # hold: leave the queue untouched, try the next bucket
+                    self.linger_holds += 1
+                    self.hold_until = (release if self.hold_until is None
+                                       else min(self.hold_until, release))
+                    continue
+            self._queues[bucket] = deque(q)
+            for r in picked:
+                # pop, not del: direct scheduler users may queue duplicate
+                # ids (only FoldClient rejects them eagerly) and both deque
+                # entries are picked here — serve both rather than
+                # KeyError mid-batch
+                self._live.pop(r.request_id, None)  # left queue: cancel False
+            est = (self.admission.estimate_bytes(bucket, len(picked))
+                   if self.admission is not None else 0)
+            deferred = (tuple(r.request_id for r in q)
+                        if stop == "admission" else ())
+            label = (self.placement.label_for(bucket)
+                     if self.placement is not None else "single")
+            return ScheduledBatch(bucket, tuple(picked), est, deferred,
+                                  placement=label)
+        return None

@@ -14,9 +14,116 @@ submit and batch start would make queue_wait_ms negative.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any
 
 import numpy as np
+
+class BatchDeviceOutput:
+    """One device->host transfer, shared by every LazyDistogram in a batch.
+
+    Holds the batch's device output array until the first ``host()`` call,
+    which materializes the whole batch on the host exactly once (numpy
+    slicing after that — a per-row device slice would eagerly compile one
+    tiny XLA program per distinct index/length and pollute the engine's
+    zero-recompile steady state) and then drops the device reference so the
+    device buffer can be freed.  Thread-safe: the background driver may
+    retire batches while a consumer fetches on another thread.
+    """
+
+    def __init__(self, device_array: Any):
+        self._device = device_array
+        self._host: np.ndarray | None = None
+        self._lock = threading.Lock()
+
+    @property
+    def materialized(self) -> bool:
+        return self._host is not None
+
+    def host(self) -> np.ndarray:
+        with self._lock:
+            if self._host is None:
+                self._host = np.asarray(self._device)
+                self._device = None          # release the device buffer
+            return self._host
+
+
+class LazyDistogram:
+    """On-demand distogram view of one request's rows in a batch output.
+
+    For long sequences the B x N x N x bins distogram is the peak
+    *host*-memory term of a served batch — the paper's Sec. 3 activation
+    bottleneck restated host-side — so the pipelined engine defers its
+    device->host transfer until a consumer actually asks.  The handle is
+    array-like: ``np.asarray(handle)`` (the numpy ``__array__`` protocol),
+    ``handle[...]``, and ``handle.fetch()`` all materialize the stripped
+    ``(L, L, bins)`` array (cached; the shared batch transfer happens once
+    per batch, on first ask from any request in it).  ``shape`` is known
+    without fetching.  Handles stay valid after the engine has moved on to
+    later batches.
+
+    Memory note: until the first fetch, the handle keeps its batch's
+    device buffer alive — a consumer that never reads any distogram of a
+    batch pins that batch's device array for as long as its FoldResults
+    are referenced (``EngineMetrics.results`` holds every result until the
+    metrics object is reset).  Pass ``keep_distogram=False`` to servers
+    that never serve distograms; a byte-bounded spill/eviction policy is a
+    ROADMAP follow-up.
+    """
+
+    def __init__(self, batch: BatchDeviceOutput, row: int, length: int,
+                 bins: int):
+        self._batch: BatchDeviceOutput | None = batch
+        self._row = row
+        self._length = length
+        self._bins = bins
+        self._arr: np.ndarray | None = None
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self._length, self._length, self._bins)
+
+    ndim = 3
+
+    @property
+    def materialized(self) -> bool:
+        """Has THIS request's slice been fetched to host yet?"""
+        return self._arr is not None
+
+    def fetch(self) -> np.ndarray:
+        """Materialize (once) and return the stripped (L, L, bins) array.
+
+        Thread-safe without a lock: ``_arr`` is published BEFORE the batch
+        reference is dropped, so a concurrent fetch either sees the batch
+        (and recomputes the same slice — benign) or sees ``_arr`` already
+        set; ``BatchDeviceOutput.host()`` itself is locked.
+        """
+        arr = self._arr
+        if arr is not None:
+            return arr
+        batch = self._batch
+        if batch is None:          # raced with a finishing fetch: _arr is
+            return self._arr       # set before _batch is cleared
+        host = batch.host()
+        arr = np.array(host[self._row, :self._length, :self._length])
+        self._arr = arr            # publish, THEN drop the batch ref
+        self._batch = None
+        return arr
+
+    def __array__(self, dtype=None, copy=None):
+        arr = self.fetch()
+        return arr if dtype is None else arr.astype(dtype)
+
+    def __getitem__(self, idx):
+        return self.fetch()[idx]
+
+    def __len__(self) -> int:
+        return self._length
+
+    def __repr__(self) -> str:
+        state = "materialized" if self.materialized else "lazy"
+        return f"LazyDistogram(shape={self.shape}, {state})"
+
 
 OK = "ok"
 REJECTED = "rejected"
@@ -60,12 +167,26 @@ class FoldResult:
     bucket: int = 0
     batch_size: int = 0
     coords: np.ndarray | None = None           # (L, 3) — padding stripped
-    distogram: np.ndarray | None = None        # (L, L, bins) — stripped
+    distogram: np.ndarray | LazyDistogram | None = None
+                                       # (L, L, bins) stripped — the
+                                       # pipelined engine hands out a
+                                       # LazyDistogram (array-like, fetched
+                                       # on first consumer ask)
     tm_vs_fp: float | None = None              # fidelity vs FP16 reference
     priority: int = 0
-    queue_wait_ms: float = 0.0
+    queue_wait_ms: float = 0.0         # arrival -> executable resolved (a
+                                       # cold compile is queue time for the
+                                       # requests waiting on it)
     compile_ms: float = 0.0            # 0 on executable-cache hits
-    run_ms: float = 0.0
+    run_ms: float = 0.0                # launch -> outputs ready; with
+                                       # inflight_depth > 1 this includes
+                                       # time queued behind the previous
+                                       # in-flight batch on the device
+    launched_batch: int = 0            # rows the executable actually ran
+                                       # (>= batch_size; dummy rows only
+                                       # when a cached size was reused)
+    occupancy: float = 0.0             # real tokens / (launched_batch *
+                                       # bucket) of its batch
     est_activation_bytes: int = 0      # admission-control price of its batch
                                        # (per-device under a sharded placement)
     kernel_backend: str = ""           # dispatch label the batch ran under
@@ -107,16 +228,3 @@ def pad_to_bucket(seqs: list[np.ndarray], bucket: int,
     return aatype, mask
 
 
-def strip_padding(out: dict[str, Any], row: int, length: int) -> dict[str, Any]:
-    """Extract one request's real-token outputs from a padded batch output.
-
-    ``out`` arrays must already be host numpy (convert the whole batch once
-    with ``np.asarray``): slicing device arrays eagerly would compile one
-    tiny XLA program per distinct length and pollute the zero-recompile
-    steady-state guarantee.
-    """
-    return {
-        "coords": np.array(out["coords"][row, :length]),
-        "distogram": (np.array(out["distogram"][row, :length, :length])
-                      if "distogram" in out else None),
-    }

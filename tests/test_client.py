@@ -137,16 +137,16 @@ def test_duplicate_live_request_id_rejected_eagerly():
         client.submit(FoldRequest(6, _seq(20)), priority=2)
 
 
-def test_failed_batch_terminates_handles_not_hangs():
-    """An execution error must surface as a terminal FAILED result, never
-    as handles stuck in RUNNING."""
+def test_failed_dispatch_terminates_handles_not_hangs():
+    """A launch/compile error in ``dispatch`` must surface as a terminal
+    FAILED result, never as handles stuck in RUNNING."""
     client = _client()
     h1 = client.submit(_seq(20))
     h2 = client.submit(_seq(24))
 
     def boom(batch):
         raise RuntimeError("XLA fell over")
-    client.core.execute = boom
+    client.core.dispatch = boom
     done = client.drive()
     assert h1.status == DONE and h2.status == DONE
     for h in (h1, h2):
@@ -155,6 +155,26 @@ def test_failed_batch_terminates_handles_not_hangs():
         _assert_legal(h)
     assert client.metrics.summary()["failed"] == 2
     assert len(done) == 2 and client.pending == 0
+
+
+def test_failed_retire_terminates_the_inflight_batch():
+    """An execution error surfacing at ``retire`` (block/transfer) must
+    fail the OLDEST in-flight batch's handles — and only those."""
+    client = _client()
+    h1 = client.submit(_seq(20))
+    h2 = client.submit(_seq(24))
+
+    def dead_retire():
+        raise RuntimeError("device dropped the batch")
+    client.core.retire = dead_retire
+    done = client.drive()
+    assert client.core.inflight_count == 1         # dispatch ran untouched
+    for h in (h1, h2):
+        r = h.result()
+        assert r.status == "failed" and "dropped the batch" in r.reason
+        _assert_legal(h)
+    assert len(done) == 2 and client.pending == 0
+    assert client.metrics.summary()["failed"] == 2
 
 
 # --------------------------------------------------------------------------

@@ -71,6 +71,12 @@ def test_describe_reports_split_auto_resolutions(monkeypatch):
     # pair-dataflow token count (seq**2 default) clears MIN_QMM_TOKENS
     assert dispatch.describe(dispatch.AUTO,
                              seq=64) == "auto:attn=ref;qmm=pallas"
+    # qmm_tokens alone gives no attention shape to resolve: the attention
+    # half must be reported unknown, not guessed capability-only
+    assert dispatch.describe(dispatch.AUTO,
+                             qmm_tokens=4096) == "auto:attn=?;qmm=pallas"
+    assert dispatch.describe(dispatch.AUTO,
+                             qmm_tokens=8) == "auto:attn=?;qmm=ref"
     # explicit modes are unaffected by the hints
     assert dispatch.describe(dispatch.REF, seq=256, qmm_tokens=8) == "ref"
     # the split label must survive a CSV row (no commas)
