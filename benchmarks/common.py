@@ -1,11 +1,43 @@
-"""Shared bench utilities: timing + CSV emission."""
+"""Shared bench utilities: timing + CSV emission + run provenance."""
 from __future__ import annotations
 
+import platform
+import subprocess
+import sys
 import time
 
 import jax
 
 ROWS: list[tuple[str, float, str]] = []
+
+
+def provenance() -> dict:
+    """Environment facts stamped into every BENCH_*.json artifact — a
+    number without the commit/device/jax-version that produced it is not
+    comparable across the nightly trajectory."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:
+        jaxlib_version = None
+    dev = jax.devices()[0]
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -42,7 +42,8 @@ def main(argv=None) -> None:
         ("compute_cost", compute_cost, "Fig 16a (compute cost)", None),
         ("latency", latency, "Fig 14 (latency scaling)", None),
         ("serving", serving, "serving throughput (engine vs sequential)",
-         ["--n", "8", "--max-len", "48", "--kernels", args.kernels]),
+         ["--n", "8", "--max-len", "48", "--kernels", args.kernels,
+          "--trace-out", "BENCH_serving_trace.json"]),
     )
     selected = (None if args.only is None
                 else {s.strip() for s in args.only.split(",") if s.strip()})
@@ -66,9 +67,11 @@ def main(argv=None) -> None:
             print(f"{mod.__name__},0,ERROR:{e}")
             sys.exit(1)
     if args.out:
+        prov = common.provenance()
         with open(args.out, "w") as fh:
             json.dump({
                 "kernels": dispatch.describe(args.kernels),
+                "provenance": prov,
                 "rows": [{"name": n, "us_per_call": us, "derived": d}
                          for n, us, d in common.ROWS],
             }, fh, indent=2)
@@ -76,6 +79,7 @@ def main(argv=None) -> None:
         if serving_summary is not None:
             # repo-root artifact: the serving trajectory the nightly job
             # uploads (engine-vs-client throughput + p99 tails per commit)
+            serving_summary.setdefault("provenance", prov)
             with open("BENCH_serving.json", "w") as fh:
                 json.dump(serving_summary, fh, indent=2)
             print("# serving summary -> BENCH_serving.json", flush=True)

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, provenance
 from repro.configs import reduce_ppm_config
 from repro.core import make_scheme
 from repro.data.pipeline import ProteinSampler
@@ -123,6 +123,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch-linger-ms", type=float, default=0.0)
     ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
                     default=dispatch.AUTO)
+    ap.add_argument("--trace-out", default=None,
+                    help="write the client path's span trace as Perfetto "
+                         "JSON (the nightly job uploads it)")
     args = ap.parse_args(argv)
 
     dispatch.set_backend(args.kernels)
@@ -226,7 +229,18 @@ def main(argv=None) -> dict:
          f"{peak / 1e6:.1f}MB<=budget={budget}MB "
          f"rejected={len(results) - len(served)}")
 
+    # pipeline-overlap evidence from the span trace: batches whose dispatch
+    # began before the previous batch's retire finished (the whole point of
+    # the in-flight ring, now assertable from the exported timeline)
+    from repro.serving import pipeline_overlaps
+    overlaps = pipeline_overlaps(client.tracer)
+    if args.trace_out:
+        client.save_trace(args.trace_out)
+        print(f"# trace -> {args.trace_out} "
+              f"(pipeline_overlaps={overlaps})", flush=True)
+
     return {
+        "provenance": provenance(),
         "n_requests": len(seqs),
         "tokens": tokens,
         "kernels": backend,
@@ -255,6 +269,7 @@ def main(argv=None) -> dict:
         "pipeline": {"inflight_depth": args.inflight_depth,
                      "max_inflight": cli_summary["pipeline"]["max_inflight"],
                      "linger_ms": args.batch_linger_ms,
+                     "trace_overlaps": overlaps,
                      "depth1_warm_s": d1_warm,
                      "bitwise_identical_to_depth1": True,
                      "compiles_unchanged_across_depths": True},

@@ -47,8 +47,9 @@ from repro.kernels import dispatch
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
-from repro.serving import (CSV_HEADER, FoldClient, csv_row, make_serving_mesh,
-                           pad_to_bucket, parse_buckets)
+from repro.serving import (CSV_HEADER, FoldClient, MetricsServer, csv_row,
+                           jax_profile, make_serving_mesh, pad_to_bucket,
+                           parse_buckets)
 
 
 def _sample_trace(args) -> list[np.ndarray]:
@@ -128,21 +129,30 @@ def serve_ppm(args):
         mesh=mesh, shard_threshold=args.shard_threshold,
         inflight_depth=args.inflight_depth,
         linger_ms=args.batch_linger_ms)
+    client.tracer.set_metadata(
+        scheme=args.scheme, kernels=dispatch.describe(args.kernels),
+        buckets=list(buckets), inflight_depth=args.inflight_depth,
+        **client.core.placement.describe())
+    server = None
+    if args.metrics_port is not None:
+        server = MetricsServer(client, port=args.metrics_port).start()
+        print(f"# metrics endpoint {server.url}/metrics")
     if args.warmup:
         client.warmup()
     tiers = priority_tiers(len(seqs), args.priority_split)
     t0 = time.perf_counter()
-    if args.driver == "thread":
-        client.start()
-    handles = [client.submit(s, priority=p, deadline_s=args.deadline_s)
-               for s, p in zip(seqs, tiers)]
-    if args.driver == "thread":
-        for h in handles:
-            if not h.done:
-                h.result(timeout=600.0)
-        client.stop()
-    else:
-        client.drive()
+    with jax_profile(args.jax_profile):
+        if args.driver == "thread":
+            client.start()
+        handles = [client.submit(s, priority=p, deadline_s=args.deadline_s)
+                   for s, p in zip(seqs, tiers)]
+        if args.driver == "thread":
+            for h in handles:
+                if not h.done:
+                    h.result(timeout=600.0)
+            client.stop()
+        else:
+            client.drive()
     client.metrics.wall_s = time.perf_counter() - t0
     results = sorted(client.metrics.results, key=lambda r: r.request_id)
     print(CSV_HEADER)
@@ -176,6 +186,19 @@ def serve_ppm(args):
     if args.report:
         client.metrics.save(args.report)
         print(f"# report -> {args.report}")
+    if args.trace_out:
+        from repro.serving import pipeline_overlaps
+        client.save_trace(args.trace_out)
+        print(f"# trace -> {args.trace_out} "
+              f"(pipeline_overlaps={pipeline_overlaps(client.tracer)})")
+    if server is not None:
+        # hold the scrape endpoint open (CI polls for this marker, then
+        # curls /metrics before the process exits)
+        if args.metrics_hold_s > 0:
+            print(f"# metrics endpoint holding {args.metrics_hold_s:.0f}s "
+                  f"at {server.url}/metrics", flush=True)
+            time.sleep(args.metrics_hold_s)
+        server.stop()
     return 0
 
 
@@ -264,6 +287,21 @@ def main(argv=None):
                          "the background driver thread (async submit)")
     ap.add_argument("--report", default=None,
                     help="write per-request metrics to this .csv/.json path")
+    # -- observability --
+    ap.add_argument("--trace-out", default=None,
+                    help="write the span trace as Chrome-trace/Perfetto "
+                         "JSON to this path (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics (+ /metrics.json, "
+                         "/healthz) on this port (0 = ephemeral)")
+    ap.add_argument("--metrics-hold-s", type=float, default=0.0,
+                    help="keep the --metrics-port endpoint up this long "
+                         "after serving finishes (lets a scraper collect "
+                         "final values; CI uses this)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a JAX/XLA profiler trace into DIR "
+                         "(TensorBoard/Perfetto); engine batch phases "
+                         "appear as named host ranges")
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)

@@ -20,7 +20,13 @@ from repro.serving.events import (EVENT_KINDS, EVENT_ORDER, TERMINAL_EVENTS,
                                   EventBus, EventStream, FoldEvent,
                                   check_request_order)
 from repro.serving.metrics import (CSV_HEADER, CompileWatcher, EngineMetrics,
-                                   csv_row, percentiles)
+                                   csv_row, percentiles,
+                                   reset_compile_watch)
+from repro.serving.observability import (PROMETHEUS_CONTENT_TYPE,
+                                         MetricsRegistry, MetricsServer,
+                                         Span, Tracer, jax_profile,
+                                         pipeline_overlaps, span_tree,
+                                         validate_chrome_trace)
 from repro.serving.placement import (SHARDED, SINGLE, Placement,
                                      PlacementPolicy, make_serving_mesh,
                                      parse_mesh_spec)
@@ -48,5 +54,9 @@ __all__ = [
     "AdmissionController", "AdmissionDecision", "ADMIT", "DEFER", "REJECT",
     "TokenBudgetScheduler", "ScheduledBatch", "pow2_buckets", "parse_buckets",
     "static_batch_for", "EngineMetrics", "CompileWatcher", "CSV_HEADER",
-    "csv_row", "percentiles", "pad_to_bucket",
+    "csv_row", "percentiles", "pad_to_bucket", "reset_compile_watch",
+    # observability (tracing + metrics registry + scrape endpoint)
+    "Span", "Tracer", "span_tree", "pipeline_overlaps",
+    "validate_chrome_trace", "MetricsRegistry", "MetricsServer",
+    "PROMETHEUS_CONTENT_TYPE", "jax_profile",
 ]

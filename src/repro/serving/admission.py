@@ -77,6 +77,10 @@ class AdmissionController:
         self.q_chunk = q_chunk
         self.shards_for = shards_for
         self._cache: dict[tuple[int, int, int], int] = {}
+        #: optional observer called on EVERY decision (including scheduler
+        #: probes — a metrics series counting verdicts sees probe traffic
+        #: too, which is the point: DEFER pressure shows up before drops)
+        self.on_decision: Callable[[AdmissionDecision, int, int], None] | None = None
 
     def _shards(self, ns: int, shards: int | None) -> int:
         if shards is not None:
@@ -130,17 +134,21 @@ class AdmissionController:
         est = self.estimate_bytes(ns, batch, k)
         per_dev = f"/device over {k} shards" if k > 1 else ""
         if self.mem_budget_bytes is None or est <= self.mem_budget_bytes:
-            return AdmissionDecision(ADMIT, est, self.mem_budget_bytes,
-                                     shards=k)
-        if batch <= 1:
-            return AdmissionDecision(
+            d = AdmissionDecision(ADMIT, est, self.mem_budget_bytes,
+                                  shards=k)
+        elif batch <= 1:
+            d = AdmissionDecision(
                 REJECT, est, self.mem_budget_bytes,
                 f"bucket {ns} needs ~{est / 1e6:.1f}MB{per_dev} alone; "
                 f"budget {self.mem_budget_bytes / 1e6:.1f}MB", shards=k)
-        return AdmissionDecision(
-            DEFER, est, self.mem_budget_bytes,
-            f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB{per_dev} "
-            f"over budget", shards=k)
+        else:
+            d = AdmissionDecision(
+                DEFER, est, self.mem_budget_bytes,
+                f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB{per_dev} "
+                f"over budget", shards=k)
+        if self.on_decision is not None:
+            self.on_decision(d, ns, batch)
+        return d
 
     def max_batch_for(self, ns: int, upper: int,
                       shards: int | None = None) -> int:

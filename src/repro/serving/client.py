@@ -57,6 +57,7 @@ import numpy as np
 from repro.serving import events as ev
 from repro.serving.engine import BatchExecutionError, EngineCore
 from repro.serving.metrics import EngineMetrics
+from repro.serving.observability.tracing import PROC_REQUESTS
 from repro.serving.scheduler import ScheduledBatch, TokenBudgetScheduler
 from repro.serving.types import (CANCELLED as R_CANCELLED, EXPIRED as
                                  R_EXPIRED, FAILED as R_FAILED,
@@ -105,6 +106,14 @@ class FoldHandle:
         self._status = initial
         self._result: FoldResult | None = None
         self.transitions: list[tuple[str, float]] = [(initial, t)]
+        #: this request's trace spans by name ("request" root + lifecycle
+        #: children) — populated by the client as the handle advances
+        self.spans: dict[str, object] = {}
+
+    def span_tree(self) -> list[dict]:
+        """This request's spans nested as ``{span, children}`` trees."""
+        from repro.serving.observability.tracing import span_tree
+        return span_tree([s for s in self.spans.values() if s is not None])
 
     # -- identity / scheduling attrs --
     @property
@@ -203,7 +212,16 @@ class FoldClient:
         self._next_id = 0
         self._driver: threading.Thread | None = None
         self._stop = False
-        self.driver_errors: list[Exception] = []
+        # bounded: a wedged driver hitting the same bug every turn must not
+        # grow this without limit; evictions are themselves counted (both
+        # here and as a metrics series)
+        self.driver_errors: deque[Exception] = deque(maxlen=32)
+        self.driver_errors_dropped = 0
+        # one tracer for the whole stack: the core created it (or was given
+        # one); request-lifecycle spans land in the same trace as the
+        # engine's batch spans, on the same clock
+        self.tracer = self.core.tracer
+        self.scheduler.tracer = self.tracer
 
     # -- metrics passthrough ----------------------------------------------
     @property
@@ -213,6 +231,26 @@ class FoldClient:
     @property
     def pending(self) -> int:
         return self.scheduler.pending
+
+    def metrics_text(self) -> str:
+        """The live metrics registry in Prometheus text exposition format
+        (what ``MetricsServer`` serves at ``/metrics``)."""
+        return self.core.metrics.registry.prometheus_text()
+
+    def metrics_json(self) -> dict:
+        """The live metrics registry as JSON-ready structures."""
+        return self.core.metrics.registry.as_dict()
+
+    def save_trace(self, path: str) -> None:
+        """Export the span trace as Chrome-trace/Perfetto JSON."""
+        self.tracer.save(path)
+
+    def _record_driver_error(self, e: Exception) -> None:
+        dropped = len(self.driver_errors) == self.driver_errors.maxlen
+        if dropped:
+            self.driver_errors_dropped += 1
+        self.driver_errors.append(e)
+        self.core.metrics.record_driver_error(dropped)
 
     def warmup(self) -> None:
         self.core.warmup()
@@ -250,7 +288,17 @@ class FoldClient:
                                   priority=priority, deadline_s=deadline_s)
             self._next_id = max(self._next_id, req.request_id) + 1
             now = self.clock()
+            track = f"req-{req.request_id}"
+            root = self.tracer.begin("request", process=PROC_REQUESTS,
+                                     thread=track, t=now,
+                                     request_id=req.request_id,
+                                     length=req.length,
+                                     priority=req.priority)
+            adm = self.tracer.begin("admission", process=PROC_REQUESTS,
+                                    thread=track, parent=root, t=now)
             rej = self.scheduler.submit(req, now)
+            self.tracer.end(adm, verdict="reject" if rej is not None
+                            else "accept")
             meta = {"length": req.length, "priority": req.priority,
                     "deadline_s": req.deadline_s}
             # events are sequenced + stream-delivered HERE, under the lock
@@ -258,6 +306,8 @@ class FoldClient:
             # SUBMITTED); subscriber callbacks run in dispatch(), off-lock
             if rej is not None:
                 handle = FoldHandle(self, req, REJECTED, now)
+                handle.spans = {"request": root, "admission": adm}
+                self.tracer.end(root, status="rejected", reason=rej.reason)
                 handle._result = FoldResult(
                     request_id=req.request_id, length=req.length,
                     status=R_REJECTED, reason=rej.reason,
@@ -269,8 +319,14 @@ class FoldClient:
                                  reason=rej.reason, **meta)
             else:
                 handle = FoldHandle(self, req, QUEUED, now)
+                handle.spans = {
+                    "request": root, "admission": adm,
+                    "queued": self.tracer.begin(
+                        "queued", process=PROC_REQUESTS, thread=track,
+                        parent=root)}
                 self.handles[req.request_id] = handle   # live-handle index
                 self.events.emit(ev.SUBMITTED, req.request_id, **meta)
+            self.core.metrics.record_queue_depth(self.scheduler.pending)
             self._cond.notify_all()          # wake the background driver
         self.events.dispatch()               # callbacks run OFF the lock
         return handle
@@ -286,6 +342,7 @@ class FoldClient:
             now = self.clock()
             handle._request.cancelled = True
             handle._advance(CANCELLED, now)
+            self._end_request_spans(handle, "cancelled", now)
             handle._result = FoldResult(
                 request_id=handle.request_id, length=handle.length,
                 status=R_CANCELLED, reason="cancelled by client",
@@ -297,6 +354,7 @@ class FoldClient:
             self.events.emit(ev.CANCELLED, handle.request_id,
                              queued_ms=(now - handle._request.arrival_time)
                              * 1e3)
+            self.core.metrics.record_queue_depth(self.scheduler.pending)
             self._cond.notify_all()
         self.events.dispatch()
         return True
@@ -308,6 +366,7 @@ class FoldClient:
         for req in self.scheduler.purge_expired(now):
             handle = self.handles.pop(req.request_id)
             handle._advance(EXPIRED, now)
+            self._end_request_spans(handle, "expired", now)
             handle._result = FoldResult(
                 request_id=req.request_id, length=req.length,
                 status=R_EXPIRED, priority=req.priority,
@@ -320,8 +379,22 @@ class FoldClient:
                              queued_ms=(now - req.arrival_time) * 1e3)
             out.append(handle._result)
         if out:
+            self.core.metrics.record_queue_depth(self.scheduler.pending)
             self._cond.notify_all()
         return out
+
+    def _end_request_spans(self, handle: FoldHandle, status: str,
+                           t: float) -> None:
+        """Close a handle's open lifecycle spans (terminal paths must never
+        leave a span dangling — an exported trace would show a cancelled
+        request still 'queued' at the horizon)."""
+        for name in ("queued", "running"):
+            s = handle.spans.get(name)
+            if s is not None:
+                self.tracer.end(s, t=t)
+        root = handle.spans.get("request")
+        if root is not None:
+            self.tracer.end(root, t=t, status=status)
 
     # -- the pump ---------------------------------------------------------
     def _expire_now(self) -> list[FoldResult]:
@@ -359,6 +432,9 @@ class FoldClient:
                 for req in batch.requests:
                     h = self.handles[req.request_id]
                     h._advance(ADMITTED, now)
+                    q = h.spans.get("queued")
+                    if q is not None:          # queue wait ends at admission
+                        self.tracer.end(q, t=now)
                     self.events.emit(ev.SCHEDULED, req.request_id,
                                      bucket=batch.bucket,
                                      batch_size=batch.batch_size,
@@ -366,9 +442,17 @@ class FoldClient:
                                      placement=batch.placement)
                 t_start = self.clock()
                 for req in batch.requests:
-                    self.handles[req.request_id]._advance(RUNNING, t_start)
+                    h = self.handles[req.request_id]
+                    h._advance(RUNNING, t_start)
+                    h.spans["running"] = self.tracer.begin(
+                        "running", process=PROC_REQUESTS,
+                        thread=f"req-{req.request_id}",
+                        parent=h.spans.get("request"), t=t_start,
+                        bucket=batch.bucket, batch_size=batch.batch_size,
+                        placement=batch.placement)
                     self.events.emit(ev.BATCH_START, req.request_id,
                                      bucket=batch.bucket, batch=ids)
+                self.core.metrics.record_queue_depth(self.scheduler.pending)
                 return batch, expired
         finally:
             self.events.dispatch()
@@ -385,6 +469,7 @@ class FoldClient:
                                  error=res.reason or None)
                 handle._result = res
                 handle._advance(DONE, now)
+                self._end_request_spans(handle, res.status, now)
                 self.events.emit(ev.COMPLETED, res.request_id,
                                  queue_wait_ms=res.queue_wait_ms,
                                  run_ms=res.run_ms, tm_vs_fp=res.tm_vs_fp,
@@ -413,11 +498,23 @@ class FoldClient:
         on a dispatch failure (compile/launch error) the batch's handles
         terminate FAILED and their results are returned."""
         try:
-            self.core.dispatch(batch)
+            flight = self.core.dispatch(batch)
         except Exception as e:
             results = self._failed_results(batch, e)
             self._finish_batch(batch, results)
             return results
+        # stamp the engine-side batch identity onto each request's running
+        # span so a trace viewer can jump request -> batch track (guarded:
+        # tests monkeypatch core.dispatch with stubs returning None)
+        seq = getattr(flight, "seq", None)
+        if seq is not None:
+            with self._lock:
+                for req in batch.requests:
+                    h = self.handles.get(req.request_id)
+                    r = None if h is None else h.spans.get("running")
+                    if r is not None:
+                        r.attrs["batch_seq"] = seq
+                        r.attrs["launch_batch"] = flight.launched_b
         self._inflight_batches.append(batch)
         return []
 
@@ -554,7 +651,7 @@ class FoldClient:
             except Exception as e:    # keep the driver alive: a scheduling
                 # bug must not strand the queue (execution failures are
                 # already converted to FAILED results inside drive)
-                self.driver_errors.append(e)
+                self._record_driver_error(e)
                 made_progress = False
             accrue()
             if made_progress:

@@ -97,7 +97,9 @@ from repro.kernels import dispatch
 from repro.models.ppm import ppm_forward, tm_score
 from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
 from repro.serving.admission import AdmissionController
-from repro.serving.metrics import EngineMetrics
+from repro.serving.metrics import EngineMetrics, reset_compile_watch
+from repro.serving.observability.profiler import annotate
+from repro.serving.observability.tracing import PROC_ENGINE, Tracer
 from repro.serving.placement import (PlacementPolicy, lower_sharded,
                                      place_inputs)
 from repro.serving.scheduler import ScheduledBatch, static_batch_for
@@ -131,6 +133,11 @@ class InFlightBatch:
     est: int                           # admission price at launched_b
     backend: str                       # dispatch label
     occupancy: float                   # real tokens / (launched_b * bucket)
+    # tracing (defaulted: nothing outside the core constructs these, but
+    # tests monkeypatch dispatch with stubs that skip them)
+    seq: int = 0                       # monotone batch sequence number
+    thread: str = ""                   # trace track, "batch-NNNN"
+    flight_span: Any = None            # open "in_flight" span (ends at retire)
 
 
 class EngineCore:
@@ -142,7 +149,8 @@ class EngineCore:
                  keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
                  inflight_depth: int = 2,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer: Tracer | None = None):
         from repro.serving.scheduler import pow2_buckets
         if inflight_depth < 1:
             raise ValueError(f"inflight_depth must be >= 1, "
@@ -176,6 +184,18 @@ class EngineCore:
         self.inflight_depth = inflight_depth
         self._inflight: deque[InFlightBatch] = deque()
         self.metrics = EngineMetrics()
+        # span tracer shares the engine clock so batch spans line up with
+        # request timestamps; the client re-exports it as ``client.tracer``
+        self.tracer = tracer if tracer is not None else Tracer(clock=clock)
+        self._batch_seq = 0
+        # every admission verdict (probes included) feeds the metrics
+        # registry; late-bound through self.metrics because run() swaps the
+        # metrics object per trace
+        self.admission.on_decision = (
+            lambda d, ns, b: self.metrics.record_admission(d.verdict, ns))
+        # a fresh engine starts a fresh compile-watch epoch: watchers marked
+        # during a PREVIOUS engine's lifetime can't count its compiles here
+        reset_compile_watch()
         self._fp_scheme = FP16Baseline()
         # key: (bucket, launch_batch, scheme.name, placement.label)
         self._executables: dict[tuple[int, int, str, str], object] = {}
@@ -247,7 +267,9 @@ class EngineCore:
         compile_s = time.perf_counter() - t0
         self._executables[key] = compiled
         self._compile_count += 1
-        self.metrics.record_compile(bucket, compile_s * 1e3)
+        self.metrics.record_compile(bucket, compile_s * 1e3,
+                                    scheme=scheme.name,
+                                    placement=placement.label)
         return compiled, compile_s
 
     def _params_for(self, placement):
@@ -295,34 +317,70 @@ class EngineCore:
                 f"in-flight ring full ({self.inflight_depth}); retire() "
                 f"the oldest batch before dispatching another")
         bucket = batch.bucket
+        seq = self._batch_seq
+        self._batch_seq += 1
+        thread = f"batch-{seq:04d}"      # one trace track per batch: the
+        # dispatch/in_flight/retire chain of batch k+1 visibly overlaps
+        # batch k's track in the exported Perfetto timeline
+        tr = self.tracer
+        d_span = tr.begin("dispatch", process=PROC_ENGINE, thread=thread,
+                          batch_seq=seq, bucket=bucket,
+                          batch_size=len(batch.requests),
+                          scheme=self.scheme.name,
+                          requests=[r.request_id for r in batch.requests])
         placement = self.placement.placement_for(bucket)
-        launched_b = self.launch_size_for(bucket, len(batch.requests),
-                                          self.scheme, placement)
-        compiled, compile_s = self._executable(bucket, launched_b,
-                                               self.scheme)
-        fp_exec = None
-        if self.fidelity and self.scheme.name != self._fp_scheme.name:
-            fp_exec, fp_compile_s = self._executable(bucket, launched_b,
-                                                     self._fp_scheme)
-            compile_s += fp_compile_s
-        # queue wait ends HERE, after executables resolve: a cold bucket's
-        # multi-second compile is queue time for the requests waiting on it
-        # (and its own compile_ms column) — never part of run_ms
-        batch_start = self.clock()
-        aat, mask = pad_to_bucket([r.aatype for r in batch.requests],
-                                  bucket, launched_b)
-        aat_j, mask_j = jnp.asarray(aat), jnp.asarray(mask)
-        params = self._params_for(placement)
-        if placement.sharded:
-            # AOT executables demand inputs matching their lowered shardings
-            aat_j, mask_j = place_inputs(placement, aat_j, mask_j)
-        real_tokens = sum(r.length for r in batch.requests)
-        t_launch = time.perf_counter()
-        out = compiled(params, aat_j, mask_j)        # async: no block here
-        # the fidelity re-run launches behind the main forward on the same
-        # device stream — it overlaps host-side work instead of waiting for
-        # the main batch's transfer like the synchronous path used to
-        fp_out = None if fp_exec is None else fp_exec(params, aat_j, mask_j)
+        try:
+            with annotate(f"serve.dispatch/{bucket}"):
+                launched_b = self.launch_size_for(
+                    bucket, len(batch.requests), self.scheme, placement)
+                with tr.span("resolve_executable", process=PROC_ENGINE,
+                             thread=thread, parent=d_span) as rs:
+                    compiled, compile_s = self._executable(
+                        bucket, launched_b, self.scheme)
+                    fp_exec = None
+                    if (self.fidelity
+                            and self.scheme.name != self._fp_scheme.name):
+                        fp_exec, fp_compile_s = self._executable(
+                            bucket, launched_b, self._fp_scheme)
+                        compile_s += fp_compile_s
+                    rs.attrs["cache"] = "hit" if compile_s == 0.0 else "miss"
+                    rs.attrs["compile_s"] = compile_s
+                # queue wait ends HERE, after executables resolve: a cold
+                # bucket's multi-second compile is queue time for the
+                # requests waiting on it (and its own compile_ms column) —
+                # never part of run_ms
+                batch_start = self.clock()
+                with tr.span("pad", process=PROC_ENGINE, thread=thread,
+                             parent=d_span):
+                    aat, mask = pad_to_bucket(
+                        [r.aatype for r in batch.requests], bucket,
+                        launched_b)
+                with tr.span("device_put", process=PROC_ENGINE,
+                             thread=thread, parent=d_span):
+                    aat_j, mask_j = jnp.asarray(aat), jnp.asarray(mask)
+                    params = self._params_for(placement)
+                    if placement.sharded:
+                        # AOT executables demand inputs matching their
+                        # lowered shardings
+                        aat_j, mask_j = place_inputs(placement, aat_j,
+                                                     mask_j)
+                real_tokens = sum(r.length for r in batch.requests)
+                with tr.span("launch", process=PROC_ENGINE, thread=thread,
+                             parent=d_span):
+                    t_launch = time.perf_counter()
+                    out = compiled(params, aat_j, mask_j)  # async: no block
+                    # the fidelity re-run launches behind the main forward
+                    # on the same device stream — it overlaps host-side work
+                    # instead of waiting for the main batch's transfer like
+                    # the synchronous path used to
+                    fp_out = (None if fp_exec is None
+                              else fp_exec(params, aat_j, mask_j))
+        except Exception as e:
+            tr.end(d_span, status="failed", error=repr(e))
+            raise
+        tr.end(d_span, launch_batch=launched_b,
+               occupancy=real_tokens / (launched_b * bucket),
+               placement=placement.label)
         flight = InFlightBatch(
             batch=batch, bucket=bucket, launched_b=launched_b,
             placement=placement, out=out, fp_out=fp_out,
@@ -334,10 +392,16 @@ class EngineCore:
                 # both auto-mode floors, at the pair-dataflow token count
                 # the launched executable actually flattens
                 qmm_tokens=launched_b * bucket * bucket),
-            occupancy=real_tokens / (launched_b * bucket))
+            occupancy=real_tokens / (launched_b * bucket),
+            seq=seq, thread=thread,
+            flight_span=tr.begin("in_flight", process=PROC_ENGINE,
+                                 thread=thread, batch_seq=seq,
+                                 bucket=bucket))
         self._inflight.append(flight)
         self.metrics.record_dispatch(len(self._inflight),
-                                     self.inflight_depth, flight.occupancy)
+                                     self.inflight_depth, flight.occupancy,
+                                     bucket=bucket, scheme=self.scheme.name,
+                                     placement=placement.label)
         return flight
 
     def retire(self) -> list[FoldResult]:
@@ -351,22 +415,45 @@ class EngineCore:
             return []
         flight = self._inflight.popleft()
         batch = flight.batch
+        tr = self.tracer
+        if flight.flight_span is not None:   # device time is over once we
+            tr.end(flight.flight_span)       # start blocking on the result
+        r_span = tr.begin("retire", process=PROC_ENGINE,
+                          thread=flight.thread or f"batch-{flight.seq:04d}",
+                          batch_seq=flight.seq, bucket=flight.bucket)
         try:
-            jax.block_until_ready(flight.out["coords"])
-            run_s = time.perf_counter() - flight.t_launch
-            # one device->host transfer per batch for coords; numpy slicing
-            # after that (a device-array slice would eagerly compile per
-            # distinct length and break the zero-recompile steady state).
-            # The distogram — the peak host-memory term at long N — stays
-            # on device behind a shared BatchDeviceOutput until a consumer
-            # asks a LazyDistogram for it.
-            coords_host = np.asarray(flight.out["coords"])
-            disto = (BatchDeviceOutput(flight.out["distogram"])
-                     if self.keep_distogram else None)
-            fp_coords = (None if flight.fp_out is None
-                         else np.asarray(flight.fp_out["coords"]))
+            with annotate(f"serve.retire/{flight.bucket}"):
+                with tr.span("block", process=PROC_ENGINE,
+                             thread=flight.thread, parent=r_span):
+                    jax.block_until_ready(flight.out["coords"])
+                run_s = time.perf_counter() - flight.t_launch
+                with tr.span("transfer", process=PROC_ENGINE,
+                             thread=flight.thread, parent=r_span):
+                    # one device->host transfer per batch for coords; numpy
+                    # slicing after that (a device-array slice would eagerly
+                    # compile per distinct length and break the
+                    # zero-recompile steady state).  The distogram — the
+                    # peak host-memory term at long N — stays on device
+                    # behind a shared BatchDeviceOutput until a consumer
+                    # asks a LazyDistogram for it.
+                    coords_host = np.asarray(flight.out["coords"])
+                    disto = None
+                    if self.keep_distogram:
+                        darr = flight.out["distogram"]
+                        pinned = int(getattr(darr, "nbytes", 0))
+                        self.metrics.record_pinned(pinned)
+                        metrics = self.metrics   # bind: run() swaps metrics
+                        disto = BatchDeviceOutput(
+                            darr, nbytes=pinned,
+                            on_release=(lambda m=metrics, n=pinned:
+                                        m.record_pinned(-n)))
+                    fp_coords = (None if flight.fp_out is None
+                                 else np.asarray(flight.fp_out["coords"]))
         except Exception as e:
+            tr.end(r_span, status="failed", error=repr(e))
             raise BatchExecutionError(batch, e) from e
+        tr.end(r_span)
+        self.metrics.record_inflight(len(self._inflight))
         results = []
         for row, req in enumerate(batch.requests):
             coords = np.array(coords_host[row, :req.length])

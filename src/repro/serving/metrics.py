@@ -14,6 +14,8 @@ import json
 import math
 from typing import IO
 
+from repro.serving.observability.registry import (FRACTION_BUCKETS,
+                                                  MetricsRegistry)
 from repro.serving.types import (CANCELLED, EXPIRED, FAILED, REJECTED,
                                  FoldResult)
 
@@ -41,8 +43,30 @@ def _latency_summary(values) -> dict[str, float]:
 # backend compilation.  One module-level listener feeds every watcher; the
 # engine's own cache-miss counter is the authoritative per-executable count,
 # this is the independent corroboration ("nothing else compiled either").
+# The listener itself can never be unregistered, but the count can be
+# EPOCHED: ``reset_compile_watch()`` starts a new epoch (every EngineCore
+# does this at construction), and a watcher whose mark predates the current
+# epoch measures from the epoch boundary instead — so a second engine's
+# "zero steady-state recompiles" assertion can't be polluted by compiles
+# the first engine performed before the reset.
 _BACKEND_COMPILES = 0
 _LISTENER_INSTALLED = False
+_WATCH_EPOCH = 0
+_EPOCH_BASE = 0           # _BACKEND_COMPILES snapshot at the last reset
+
+
+def reset_compile_watch() -> int:
+    """Start a new compile-watch epoch: existing watchers measure from
+    this boundary (not their older marks) until they re-``mark()``.
+    Returns the new epoch id."""
+    global _WATCH_EPOCH, _EPOCH_BASE
+    _WATCH_EPOCH += 1
+    _EPOCH_BASE = _BACKEND_COMPILES
+    return _WATCH_EPOCH
+
+
+def compile_watch_epoch() -> int:
+    return _WATCH_EPOCH
 
 
 def _install_listener() -> bool:
@@ -65,17 +89,27 @@ def _install_listener() -> bool:
 
 
 class CompileWatcher:
-    """Counts JAX backend compilations between ``mark()`` and ``delta()``."""
+    """Counts JAX backend compilations between ``mark()`` and ``delta()``.
+
+    Epoch-aware: when ``reset_compile_watch()`` ran after this watcher's
+    mark (a new engine was stood up), ``delta()`` counts from the epoch
+    boundary instead of the stale mark — compiles that belonged to the
+    previous engine's lifetime can't leak into this window."""
 
     def __init__(self):
         self.available = _install_listener()
-        self._mark = _BACKEND_COMPILES
+        self.mark()
 
     def mark(self) -> None:
+        self._epoch = _WATCH_EPOCH
         self._mark = _BACKEND_COMPILES
 
+    #: explicit alias: re-baseline this watcher at "now"
+    reset = mark
+
     def delta(self) -> int:
-        return _BACKEND_COMPILES - self._mark
+        base = (_EPOCH_BASE if self._epoch != _WATCH_EPOCH else self._mark)
+        return _BACKEND_COMPILES - base
 
 
 # -- aggregation ------------------------------------------------------------
@@ -148,8 +182,64 @@ class EngineMetrics:
         self.linger_ms: float = 0.0        # configured fill-or-timeout
         self.linger_holds: int = 0         # scheduler hold decisions
         self._lock = threading.Lock()
+        # labeled instrument registry: the Prometheus/JSON scrape surface.
+        # Every record_* below feeds both the legacy aggregates (summary/
+        # CSV/JSON report shapes stay byte-compatible) and these series.
+        self.registry = MetricsRegistry()
+        reg = self.registry
+        self._m_requests = reg.counter(
+            "fold_requests_total", "Requests by terminal status",
+            ("status", "bucket"))
+        self._m_tokens = reg.counter(
+            "fold_tokens_total", "Real (unpadded) tokens served", ("bucket",))
+        self._m_queue_wait = reg.histogram(
+            "fold_queue_wait_seconds", "Submit-to-dispatch queue wait",
+            ("bucket",))
+        self._m_run = reg.histogram(
+            "fold_run_seconds", "Dispatch-to-retire batch latency",
+            ("bucket", "placement", "backend"))
+        self._m_compiles = reg.counter(
+            "fold_compiles_total", "Executable-cache misses (AOT compiles)",
+            ("bucket", "scheme", "placement"))
+        self._m_compile_s = reg.counter(
+            "fold_compile_seconds_total", "Seconds spent compiling",
+            ("bucket", "scheme", "placement"))
+        self._m_batches = reg.counter(
+            "fold_batches_total", "Batches dispatched",
+            ("bucket", "scheme", "placement"))
+        self._m_occupancy = reg.histogram(
+            "fold_batch_occupancy", "Token occupancy of dispatched batches",
+            ("bucket",), buckets=FRACTION_BUCKETS)
+        self._m_inflight = reg.gauge(
+            "fold_inflight_batches", "Batches currently in the ring")
+        self._m_inflight_depth = reg.gauge(
+            "fold_inflight_depth", "Configured in-flight ring depth")
+        self._m_linger = reg.counter(
+            "fold_linger_holds_total", "Scheduler fill-or-timeout holds")
+        self._m_admission = reg.counter(
+            "fold_admission_decisions_total", "Admission verdicts",
+            ("verdict", "bucket"))
+        self._m_queue_depth = reg.gauge(
+            "fold_queue_depth", "Requests pending in scheduler queues")
+        self._m_pinned = reg.gauge(
+            "fold_pinned_distogram_bytes",
+            "Device bytes pinned by unfetched lazy distograms")
+        self._m_wall = reg.counter(
+            "fold_wall_seconds_total", "Serving wall-clock seconds")
+        self._m_driver_errors = reg.counter(
+            "fold_driver_errors_total", "Background driver loop errors")
+        self._m_driver_dropped = reg.counter(
+            "fold_driver_errors_dropped_total",
+            "Driver errors evicted from the bounded ring")
 
     def record(self, r: FoldResult) -> None:
+        self._m_requests.inc(status=r.status, bucket=r.bucket)
+        if r.ok:
+            self._m_tokens.inc(r.length, bucket=r.bucket)
+            self._m_queue_wait.observe(r.queue_wait_ms / 1e3, bucket=r.bucket)
+            self._m_run.observe(r.run_ms / 1e3, bucket=r.bucket,
+                                placement=r.placement,
+                                backend=r.kernel_backend)
         with self._lock:
             self.results.append(r)
             st = self._buckets.setdefault(r.bucket, BucketStats(r.bucket))
@@ -179,15 +269,22 @@ class EngineMetrics:
         requests_per_s/tokens_per_s without anyone assigning ``wall_s``)."""
         with self._lock:
             self.wall_s += dt
+        self._m_wall.inc(max(dt, 0.0))
 
-    def record_compile(self, bucket: int, ms: float) -> None:
+    def record_compile(self, bucket: int, ms: float, *,
+                       scheme: str = "", placement: str = "single") -> None:
         with self._lock:
             st = self._buckets.setdefault(bucket, BucketStats(bucket))
             st.compiles += 1
             st.compile_ms += ms
+        self._m_compiles.inc(bucket=bucket, scheme=scheme,
+                             placement=placement)
+        self._m_compile_s.inc(max(ms, 0.0) / 1e3, bucket=bucket,
+                              scheme=scheme, placement=placement)
 
     def record_dispatch(self, inflight_now: int, depth: int,
-                        occupancy: float) -> None:
+                        occupancy: float, *, bucket: int = 0,
+                        scheme: str = "", placement: str = "single") -> None:
         """Per-batch pipeline telemetry (the engine core calls this on
         every ``dispatch``): ring depth config + deepest observed ring +
         the batch's token occupancy."""
@@ -195,13 +292,41 @@ class EngineMetrics:
             self.inflight_depth = depth
             self.max_inflight = max(self.max_inflight, inflight_now)
             self.batch_occupancies.append(occupancy)
+        self._m_batches.inc(bucket=bucket, scheme=scheme,
+                            placement=placement)
+        self._m_occupancy.observe(occupancy, bucket=bucket)
+        self._m_inflight.set(inflight_now)
+        self._m_inflight_depth.set(depth)
 
     def record_linger(self, holds: int, linger_ms: float) -> None:
         """Sync the scheduler's fill-or-timeout counters (idempotent; the
         client calls this each scheduling turn)."""
         with self._lock:
+            delta = holds - self.linger_holds
             self.linger_holds = holds
             self.linger_ms = linger_ms
+        if delta > 0:
+            self._m_linger.inc(delta)
+
+    def record_admission(self, verdict: str, bucket: int) -> None:
+        """One admission decision (ADMIT/REJECT/DEFER), including probes."""
+        self._m_admission.inc(verdict=verdict, bucket=bucket)
+
+    def record_queue_depth(self, n: int) -> None:
+        self._m_queue_depth.set(n)
+
+    def record_inflight(self, n: int) -> None:
+        self._m_inflight.set(n)
+
+    def record_pinned(self, delta_bytes: int) -> None:
+        """Track device bytes pinned by unfetched lazy distograms
+        (positive on retire, negative when a host fetch releases them)."""
+        self._m_pinned.inc(delta_bytes)
+
+    def record_driver_error(self, dropped: bool = False) -> None:
+        self._m_driver_errors.inc()
+        if dropped:
+            self._m_driver_dropped.inc()
 
     def summary(self) -> dict:
         with self._lock:       # one consistent snapshot: a racing record()

@@ -1,0 +1,38 @@
+"""repro.serving.observability — tracing + metrics for the serving stack.
+
+Three zero-dependency pieces, threaded through the whole engine:
+
+  * ``tracing`` — per-request and per-batch ``Span`` trees recorded by a
+    bounded, clock-injectable ``Tracer``; exported as Chrome-trace/
+    Perfetto JSON (``--trace-out``) where the in-flight ring's
+    dispatch/retire overlap is *visible* (and ``pipeline_overlaps``
+    makes it assertable);
+  * ``registry`` — labeled Counter/Gauge/Histogram instruments with
+    Prometheus text-format and JSON exposition
+    (``FoldClient.metrics_text()`` / ``metrics_json()``), the per-replica
+    scrape surface a fleet router federates;
+  * ``profiler`` + ``httpd`` — the ``jax.profiler`` annotation bridge
+    (``--jax-profile``) and the optional stdlib scrape endpoint
+    (``--metrics-port``).
+"""
+from repro.serving.observability.httpd import MetricsServer
+from repro.serving.observability.profiler import (annotate, jax_profile,
+                                                  step_annotation)
+from repro.serving.observability.registry import (FRACTION_BUCKETS,
+                                                  LATENCY_BUCKETS,
+                                                  PROMETHEUS_CONTENT_TYPE,
+                                                  Counter, Gauge, Histogram,
+                                                  MetricsRegistry)
+from repro.serving.observability.tracing import (PROC_ENGINE, PROC_REQUESTS,
+                                                 Span, Tracer, iter_tree,
+                                                 pipeline_overlaps,
+                                                 span_tree,
+                                                 validate_chrome_trace)
+
+__all__ = [
+    "Span", "Tracer", "span_tree", "iter_tree", "pipeline_overlaps",
+    "validate_chrome_trace", "PROC_REQUESTS", "PROC_ENGINE",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "LATENCY_BUCKETS", "FRACTION_BUCKETS", "PROMETHEUS_CONTENT_TYPE",
+    "MetricsServer", "annotate", "step_annotation", "jax_profile",
+]

@@ -1,0 +1,101 @@
+"""Optional stdlib scrape endpoint for a serving process.
+
+``MetricsServer`` wraps ``http.server.ThreadingHTTPServer`` on a
+background daemon thread and serves the client's metrics registry:
+
+  * ``GET /metrics``       — Prometheus text exposition (what a
+    prometheus scraper — or the future fleet router — pulls per replica);
+  * ``GET /metrics.json``  — the same registry as JSON;
+  * ``GET /healthz``       — liveness (``ok`` + whether a driver thread
+    is pumping).
+
+Zero dependencies; one short-lived handler thread per request, reading a
+thread-safe registry — a scrape can never block the serving pump.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.serving.observability.registry import PROMETHEUS_CONTENT_TYPE
+
+
+class MetricsServer:
+    """Serve a FoldClient's metrics registry over HTTP.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port`` —
+    what tests use).  Start/stop explicitly or use as a context manager.
+    """
+
+    def __init__(self, client, port: int = 0, host: str = "127.0.0.1"):
+        self.client = client
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *args):      # quiet: no per-scrape spam
+                pass
+
+            def _send(self, code: int, content_type: str,
+                      body: bytes) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", content_type)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):
+                path = self.path.split("?", 1)[0]
+                try:
+                    if path == "/metrics":
+                        self._send(200, PROMETHEUS_CONTENT_TYPE,
+                                   outer.client.metrics_text()
+                                   .encode("utf-8"))
+                    elif path == "/metrics.json":
+                        self._send(200, "application/json",
+                                   json.dumps(outer.client.metrics_json())
+                                   .encode("utf-8"))
+                    elif path == "/healthz":
+                        body = json.dumps({
+                            "ok": True,
+                            "driving": bool(getattr(outer.client,
+                                                    "driving", False)),
+                            "pending": int(getattr(outer.client,
+                                                   "pending", 0)),
+                        }).encode("utf-8")
+                        self._send(200, "application/json", body)
+                    else:
+                        self._send(404, "text/plain", b"not found\n")
+                except Exception as e:   # a scrape bug must not kill serving
+                    self._send(500, "text/plain", repr(e).encode("utf-8"))
+
+        self._server = ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.host = host
+        self.port = int(self._server.server_address[1])
+        self._thread: threading.Thread | None = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "MetricsServer":
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._server.serve_forever, name="metrics-httpd",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "MetricsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

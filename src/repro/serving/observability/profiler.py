@@ -1,0 +1,70 @@
+"""Bridge from the serving tracer to the JAX/XLA profiler.
+
+The span tracer times *host-side* phases; the XLA profiler sees *device*
+kernels.  To line the two up, the engine core wraps its dispatch/retire
+bodies in ``annotate(...)`` — a ``jax.profiler.TraceAnnotation`` when the
+profiler API is available (a cheap no-op context otherwise), so a
+``--jax-profile DIR`` run shows the engine's batch phases as named ranges
+inside the XLA timeline, alongside the kernels they launched.
+
+``jax_profile(dir)`` is the run-level context the launchers use: start a
+JAX profiler trace into ``dir`` (open with TensorBoard or Perfetto), stop
+it on exit, and degrade to a no-op when profiling is unavailable or
+``dir`` is falsy.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_ANNOTATION = None
+_CHECKED = False
+
+
+def _annotation_cls():
+    """Resolve jax.profiler.TraceAnnotation once (None = unavailable)."""
+    global _ANNOTATION, _CHECKED
+    if not _CHECKED:
+        _CHECKED = True
+        try:
+            from jax.profiler import TraceAnnotation
+            _ANNOTATION = TraceAnnotation
+        except Exception:       # profiler API absent/moved: stay a no-op
+            _ANNOTATION = None
+    return _ANNOTATION
+
+
+def annotate(name: str):
+    """Context manager naming the enclosed host work in XLA profiler
+    traces; a no-op context when the profiler API is unavailable."""
+    cls = _annotation_cls()
+    return contextlib.nullcontext() if cls is None else cls(name)
+
+
+def step_annotation(name: str, step: int):
+    """``StepTraceAnnotation`` variant (profiler step markers); falls back
+    to a plain annotation, then to a no-op."""
+    try:
+        from jax.profiler import StepTraceAnnotation
+        return StepTraceAnnotation(name, step_num=step)
+    except Exception:
+        return annotate(f"{name}:{step}")
+
+
+@contextlib.contextmanager
+def jax_profile(log_dir: str | None):
+    """Run-level JAX profiler capture into ``log_dir`` (no-op when falsy
+    or the profiler cannot start — e.g. another trace is active)."""
+    if not log_dir:
+        yield False
+        return
+    import jax
+    try:
+        jax.profiler.start_trace(log_dir)
+    except Exception as e:          # pragma: no cover - env-dependent
+        print(f"# jax-profile disabled ({e!r})")
+        yield False
+        return
+    try:
+        yield True
+    finally:
+        jax.profiler.stop_trace()

@@ -124,6 +124,17 @@ class PlacementPolicy:
     def label_for(self, bucket: int) -> str:
         return self.placement_for(bucket).label
 
+    def describe(self) -> dict:
+        """Run-level placement facts for trace metadata / provenance."""
+        out: dict[str, Any] = {"shard_threshold": self.shard_threshold}
+        if self.mesh is None:
+            out.update(mesh=None, model_shards=1)
+        else:
+            out.update(mesh="x".join(f"{int(self.mesh.shape[a])}{a[0]}"
+                                     for a in self.mesh.axis_names),
+                       model_shards=self._model)
+        return out
+
 
 def lower_sharded(placement: Placement, forward, params, *args):
     """AOT-lower ``forward(params, *args)`` under the placement's mesh.

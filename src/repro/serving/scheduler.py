@@ -131,7 +131,7 @@ class TokenBudgetScheduler:
     def __init__(self, buckets: tuple[int, ...], *,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  admission: AdmissionController | None = None,
-                 placement=None, linger_ms: float = 0.0):
+                 placement=None, linger_ms: float = 0.0, tracer=None):
         if not buckets:
             raise ValueError("need at least one bucket edge")
         if linger_ms < 0:
@@ -146,6 +146,7 @@ class TokenBudgetScheduler:
         # same-bucket arrivals fill its would-be dummy rows (0 = launch
         # immediately, the historical behavior)
         self.linger_ms = linger_ms
+        self.tracer = tracer           # optional span Tracer: hold markers
         self.linger_holds = 0          # next_batch turns that held a bucket
         self.hold_until: float | None = None   # earliest launch time among
                                                # buckets held this turn
@@ -277,6 +278,11 @@ class TokenBudgetScheduler:
                     self.linger_holds += 1
                     self.hold_until = (release if self.hold_until is None
                                        else min(self.hold_until, release))
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "linger_hold", process="engine",
+                            thread="scheduler", bucket=bucket,
+                            picked=len(picked), release=release)
                     continue
             self._queues[bucket] = deque(q)
             for r in picked:

@@ -31,21 +31,30 @@ class BatchDeviceOutput:
     retire batches while a consumer fetches on another thread.
     """
 
-    def __init__(self, device_array: Any):
+    def __init__(self, device_array: Any, nbytes: int = 0,
+                 on_release: Any = None):
         self._device = device_array
         self._host: np.ndarray | None = None
         self._lock = threading.Lock()
+        #: device bytes this output pins until first host() (telemetry)
+        self.nbytes = int(nbytes)
+        self._on_release = on_release
 
     @property
     def materialized(self) -> bool:
         return self._host is not None
 
     def host(self) -> np.ndarray:
+        release = None
         with self._lock:
             if self._host is None:
                 self._host = np.asarray(self._device)
                 self._device = None          # release the device buffer
-            return self._host
+                release, self._on_release = self._on_release, None
+            host = self._host
+        if release is not None:    # outside the lock: callback feeds a
+            release()              # metrics gauge with its own lock
+        return host
 
 
 class LazyDistogram:
