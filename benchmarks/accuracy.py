@@ -8,13 +8,10 @@ trunk so token statistics match the full model's quantization regime.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.configs import get_ppm_config
+from benchmarks.common import emit
 from repro.core import make_scheme, quant_rmse
 from repro.core.schemes import SCHEMES
 from repro.data.pipeline import ProteinSampler

@@ -5,10 +5,8 @@ latency comes from the §Roofline terms), plus kernel microbenches.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import make_scheme
 from repro.models.ppm import init_ppm, ppm_forward
 from repro.models.ppm.trunk import PPMConfig
 

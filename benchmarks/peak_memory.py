@@ -9,9 +9,6 @@ ESMFold scale (+ compiled memory_analysis cross-check at small Ns on CPU):
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from benchmarks.common import emit, gb
 from repro.configs import get_ppm_config
 from repro.core.schemes import AAQScheme, FP16Baseline

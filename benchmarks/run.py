@@ -22,7 +22,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (footprint, accuracy, "
-                         "peak_memory, compute_cost, latency, serving)")
+                         "peak_memory, compute_cost, latency, serving, "
+                         "transport)")
     ap.add_argument("--out", default=None,
                     help="also write emitted rows to this JSON path")
     ap.add_argument("--kernels", choices=["pallas", "ref", "auto"],
@@ -34,7 +35,7 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     from benchmarks import (accuracy, common, compute_cost, footprint,
-                            latency, peak_memory, serving)
+                            latency, peak_memory, serving, transport)
     suites = (
         ("footprint", footprint, "Table 1 (memory footprint)", None),
         ("accuracy", accuracy, "Fig 13 (TM-score) + §4.1 RMSE", None),
@@ -44,6 +45,8 @@ def main(argv=None) -> None:
         ("serving", serving, "serving throughput (engine vs sequential)",
          ["--n", "8", "--max-len", "48", "--kernels", args.kernels,
           "--trace-out", "BENCH_serving_trace.json"]),
+        ("transport", transport, "HTTP front-end overhead (vs in-process)",
+         ["--n", "6", "--max-len", "48", "--kernels", args.kernels]),
     )
     selected = (None if args.only is None
                 else {s.strip() for s in args.only.split(",") if s.strip()})

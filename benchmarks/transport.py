@@ -1,0 +1,150 @@
+"""Transport overhead bench: the HTTP fold-serving front-end vs the
+in-process ``FoldClient`` on the SAME warm engine.
+
+The network path adds JSON framing, base64 array encoding, a fleet-router
+hop, and socket round-trips on top of the exact same bucketed executables
+— so its overhead is measurable as (http_warm - inprocess_warm) / n on a
+trace both paths serve end-to-end.  The bench refuses to report timings
+unless the HTTP coords are BITWISE identical to the in-process coords
+(batch-invariant numerics make that comparison exact, and the base64
+raw-bytes wire encoding is lossless by construction).
+
+Also micro-benches the protocol codec itself (encode+decode round-trip of
+a result's coords) so wire-format regressions show up independently of
+socket noise.
+
+    PYTHONPATH=src python -m benchmarks.transport [--n 8] [--kernels ref]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import reduce_ppm_config
+from repro.data.pipeline import ProteinSampler
+from repro.kernels import dispatch
+from repro.models.ppm import init_ppm
+from repro.serving import FleetRouter, FoldClient, FoldHTTPServer
+from repro.serving.transport import protocol
+from repro.serving.transport.server import request_json
+
+
+def _trace(n: int, min_len: int, max_len: int):
+    sampler = ProteinSampler(seed=11, min_len=min_len, max_len=max_len)
+    return [sampler.sample(i) for i in range(n)]
+
+
+def bench_inprocess(client, seqs):
+    t0 = time.perf_counter()
+    handles = [client.submit(s) for s in seqs]
+    client.drive()
+    results = [h.result() for h in handles]
+    return time.perf_counter() - t0, results
+
+
+def bench_http(url: str, seqs, timeout_s: float):
+    """Submit the whole trace over HTTP, then poll every fold to DONE."""
+    t0 = time.perf_counter()
+    ids = [request_json(f"{url}/v1/fold", method="POST",
+                        body={"sequence": s.tolist()})["id"] for s in seqs]
+    coords, deadline = [], time.monotonic() + timeout_s
+    for rid in ids:
+        while True:
+            status = request_json(f"{url}/v1/fold/{rid}")
+            if status["done"]:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"fold {rid} stuck in {status['state']}")
+            time.sleep(0.02)
+        assert status["state"] == "DONE", status
+        coords.append(protocol.decode_array(status["result"]["coords"]))
+    return time.perf_counter() - t0, coords
+
+
+def bench_codec(result, iters: int = 200) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        wire = protocol.encode_result(result)
+        protocol.decode_array(wire["coords"])
+    return (time.perf_counter() - t0) / iters
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--min-len", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--scheme", default="lightnobel_aaq")
+    ap.add_argument("--buckets", default="32,48")
+    ap.add_argument("--max-tokens-per-batch", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--timeout-s", type=float, default=600.0)
+    ap.add_argument("--kernels", choices=list(dispatch.BACKENDS),
+                    default=dispatch.AUTO)
+    args = ap.parse_args(argv)
+
+    dispatch.set_backend(args.kernels)
+    backend = dispatch.describe(args.kernels)
+    cfg = reduce_ppm_config()
+    params = init_ppm(jax.random.PRNGKey(0), cfg)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    seqs = _trace(args.n, args.min_len, args.max_len)
+    tokens = sum(len(s) for s in seqs)
+
+    client = FoldClient(params, cfg, args.scheme, buckets=buckets,
+                        max_tokens_per_batch=args.max_tokens_per_batch,
+                        max_batch=args.max_batch, kernels=args.kernels)
+    cold_s, _ = bench_inprocess(client, seqs)          # compile everything
+    warm_s, ref_results = bench_inprocess(client, seqs)
+    compiles = client.core.compile_count
+    emit("transport.inprocess.warm", warm_s * 1e6,
+         f"{len(seqs) / warm_s:.2f}req/s {tokens / warm_s:.1f}tok/s "
+         f"compiles={compiles} kernels={backend}")
+
+    codec_s = bench_codec(ref_results[0])
+    emit("transport.codec.roundtrip", codec_s * 1e6,
+         f"coords={ref_results[0].coords.shape} base64-raw-bytes")
+
+    router = FleetRouter.wrap(client, autostart=True)
+    with FoldHTTPServer(router) as srv:
+        # cold: requests trickle in over the socket, so the driver sees
+        # different launch sizes than the inline pump and may compile new
+        # (bucket, launch-size) executables — batch-invariant numerics
+        # keep the coords bitwise identical regardless
+        http_cold_s, _ = bench_http(srv.url, seqs, args.timeout_s)
+        http_compiles = client.core.compile_count
+        http_s, http_coords = bench_http(srv.url, seqs, args.timeout_s)
+    router.stop()
+    assert client.core.compile_count == http_compiles, \
+        "warm HTTP re-run recompiled"
+    for got, ref in zip(http_coords, ref_results):
+        assert got.tobytes() == ref.coords.tobytes(), \
+            "HTTP coords diverged from in-process coords"
+
+    overhead_ms = (http_s - warm_s) / len(seqs) * 1e3
+    emit("transport.http.warm", http_s * 1e6,
+         f"{len(seqs) / http_s:.2f}req/s {tokens / http_s:.1f}tok/s "
+         f"overhead_per_req_ms={overhead_ms:.2f} "
+         f"compiles={http_compiles} bitwise=identical")
+
+    return {
+        "n_requests": len(seqs),
+        "tokens": tokens,
+        "kernels": backend,
+        "compiles": compiles,
+        "inprocess": {"cold_s": cold_s, "warm_s": warm_s,
+                      "req_per_s": len(seqs) / warm_s},
+        "http": {"cold_s": http_cold_s, "warm_s": http_s,
+                 "req_per_s": len(seqs) / http_s,
+                 "overhead_per_req_ms": overhead_ms,
+                 "compiles": http_compiles,
+                 "bitwise_identical": True},
+        "codec": {"roundtrip_us": codec_s * 1e6},
+    }
+
+
+if __name__ == "__main__":
+    main()

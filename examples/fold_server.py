@@ -6,6 +6,12 @@ stream, and the bucketed continuous-batching ``EngineCore`` underneath
 control) — reporting per-request queue wait, latency, TM-vs-FP fidelity,
 and p50/p95/p99 latency tails.
 
+The second act serves the SAME engine over the network: a
+``FoldHTTPServer`` (stdlib HTTP, ephemeral port) over a single-replica
+``FleetRouter`` wrapping the client — submit/poll/fetch over real
+sockets, coords bitwise-identical to the in-process path, SSE event
+history intact.
+
     PYTHONPATH=src python examples/fold_server.py
 """
 import os
@@ -19,8 +25,10 @@ import numpy as np
 from repro.configs import reduce_ppm_config
 from repro.data.pipeline import ProteinSampler
 from repro.models.ppm import init_ppm
-from repro.serving import (CSV_HEADER, FoldClient, check_request_order,
-                           csv_row)
+from repro.serving import (CSV_HEADER, FleetRouter, FoldClient,
+                           FoldHTTPServer, check_request_order, csv_row)
+from repro.serving.transport import protocol
+from repro.serving.transport.server import request_json
 
 
 def main() -> int:
@@ -84,6 +92,33 @@ def main() -> int:
     for r, seq in zip(results, trace):
         assert r.coords.shape == (len(seq), 3)
         assert np.isfinite(r.coords).all()
+
+    # -- act two: the same engine, over the network -------------------------
+    # A single-replica fleet router wraps the live client; the HTTP server
+    # binds an ephemeral port.  Warm executables mean no recompiles: the
+    # network path reuses everything act one compiled.
+    router = FleetRouter.wrap(client, autostart=True)
+    with FoldHTTPServer(router) as srv:
+        print(f"# serving HTTP at {srv.url}")
+        seq = trace[0]
+        resp = request_json(f"{srv.url}/v1/fold", method="POST",
+                            body={"sequence": seq.tolist(), "priority": 1})
+        rid = resp["id"]
+        rec = router.get(rid)
+        rec.handle.result(timeout=600.0)       # background driver serves it
+        status = request_json(f"{srv.url}/v1/fold/{rid}")
+        assert status["state"] == "DONE", status
+        coords = protocol.decode_array(status["result"]["coords"])
+        # the wire is bitwise-lossless: network coords == in-process coords
+        assert coords.tobytes() == results[0].coords.tobytes()
+        # plain polls never shipped the distogram; asking materializes it
+        assert status["result"]["distogram"] is None
+        with_dist = request_json(f"{srv.url}/v1/fold/{rid}?distogram=1")
+        assert with_dist["result"]["distogram"] is not None
+        hz = request_json(f"{srv.url}/healthz")
+        print(f"# http fold {rid} ok coords={coords.shape} "
+              f"replicas_healthy={sum(r['healthy'] for r in hz['replicas'])}")
+    router.stop()
     return 0
 
 

@@ -18,7 +18,6 @@ import re
 from typing import Mapping
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.quantize import fake_quant as _fake_quant, fake_quant_ste as _fake_quant_ste, quantize as _quantize_fn
 from repro.core.qtensor import QTensor

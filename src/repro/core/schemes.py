@@ -19,10 +19,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.policy import AAQConfig, NO_QUANT
+from repro.core.policy import AAQConfig
 from repro.core.qtensor import qmax
 
 _EPS = 1e-12

@@ -6,7 +6,6 @@ place of ``scheme.linear`` (see models/ppm and EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
 from repro.kernels.aaq_matmul.aaq_matmul import aaq_matmul_pallas

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the dequantization-free AAQ matmul kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.qtensor import unpack_int4

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
 from repro.kernels.aaq_quant.aaq_quant import aaq_quantize_pallas

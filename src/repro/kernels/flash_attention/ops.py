@@ -6,8 +6,6 @@ dry-run lowering).  Same semantics either way — the tests assert it.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.flash_attention.flash_attention import flash_mha_pallas
 from repro.kernels.flash_attention.ref import mha_ref
 

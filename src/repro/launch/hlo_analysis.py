@@ -28,9 +28,7 @@ Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from collections import defaultdict
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

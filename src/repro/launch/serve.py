@@ -30,6 +30,15 @@ interpret mode.  ``--report`` rows record the backend each batch ran under.
         PYTHONPATH=src python -m repro.launch.serve --mode ppm \
         --buckets 32,64 --mesh 2x4 --shard-threshold 64
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
+
+``--listen HOST:PORT`` switches ppm mode into a network server: an HTTP
+front-end (``POST /v1/fold``, status/SSE/cancel, ``/metrics``) over a
+``--replicas``-wide fleet of engine replicas routed on live telemetry
+(repro.serving.transport); port 0 binds ephemerally and the bound address
+is printed as ``# listening ...``:
+
+    PYTHONPATH=src python -m repro.launch.serve --mode ppm \
+        --listen 127.0.0.1:8077 --replicas 2 --no-fidelity
 """
 from __future__ import annotations
 
@@ -47,9 +56,11 @@ from repro.kernels import dispatch
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
-from repro.serving import (CSV_HEADER, FoldClient, MetricsServer, csv_row,
+from repro.serving import (CSV_HEADER, FleetRouter, FoldClient,
+                           FoldHTTPServer, MetricsServer, csv_row,
                            jax_profile, make_serving_mesh, pad_to_bucket,
                            parse_buckets)
+from repro.serving.observability.httpd import parse_hostport
 
 
 def _sample_trace(args) -> list[np.ndarray]:
@@ -99,6 +110,71 @@ def _serve_ppm_sequential(args, cfg, params, seqs, buckets) -> int:
     return 0
 
 
+def serve_http(args, cfg, params, buckets) -> int:
+    """Network server mode (``--listen``): a FoldHTTPServer over a
+    ``--replicas``-wide FleetRouter, up until SIGTERM/SIGINT (or
+    ``--serve-for-s``).  Each replica is its own FoldClient + background
+    driver; the router balances on live queue-depth/in-flight telemetry
+    scraped from the replicas' registries."""
+    import signal
+    import threading
+
+    try:
+        host, port = parse_hostport(args.listen)
+    except ValueError as e:
+        print(f"error: {e}")
+        return 2
+
+    def factory(i: int) -> FoldClient:
+        client = FoldClient(
+            params, cfg, args.scheme, buckets=buckets,
+            max_tokens_per_batch=args.max_tokens_per_batch,
+            max_batch=args.max_batch, mem_budget_mb=args.mem_budget_mb,
+            fidelity=not args.no_fidelity, kernels=args.kernels,
+            mesh=make_serving_mesh(args.mesh), shard_threshold=args.shard_threshold,
+            inflight_depth=args.inflight_depth,
+            linger_ms=args.batch_linger_ms)
+        client.tracer.set_metadata(
+            replica=i, scheme=args.scheme,
+            kernels=dispatch.describe(args.kernels), buckets=list(buckets),
+            inflight_depth=args.inflight_depth,
+            **client.core.placement.describe())
+        if args.warmup:
+            client.warmup()
+        return client
+
+    router = FleetRouter(factory, args.replicas)
+    server = FoldHTTPServer(router, port=port, host=host).start()
+    # the CI job and any launcher scrape THIS line for the bound address
+    # (--listen HOST:0 binds an ephemeral port)
+    print(f"# listening {server.url} replicas={args.replicas} "
+          f"buckets={','.join(map(str, buckets))} "
+          f"kernels={dispatch.describe(args.kernels)}", flush=True)
+
+    done = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: done.set())
+    try:
+        done.wait(args.serve_for_s if args.serve_for_s > 0 else None)
+    except KeyboardInterrupt:
+        pass
+    print("# shutting down", flush=True)
+    server.stop()
+    router.stop(drain=True)
+    for r in router.replicas:
+        s = r.client.metrics.summary()
+        print(f"# replica={r.index} served={s['served']}/{s['requests']} "
+              f"rejected={s['rejected']} expired={s['expired']} "
+              f"cancelled={s['cancelled']} compiles={s['compiles']}")
+    if args.trace_out:
+        stem = args.trace_out[:-5] if args.trace_out.endswith(".json") \
+            else args.trace_out
+        for path in router.save_traces(stem):
+            print(f"# trace -> {path}")
+    print("# fleet shutdown complete", flush=True)
+    return 0
+
+
 def serve_ppm(args):
     cfg = reduce_ppm_config()
     params = init_ppm(jax.random.PRNGKey(0), cfg)
@@ -121,6 +197,8 @@ def serve_ppm(args):
     except ValueError as e:
         print(f"error: {e}")
         return 2
+    if args.listen is not None:
+        return serve_http(args, cfg, params, buckets)
     client = FoldClient(
         params, cfg, args.scheme, buckets=buckets,
         max_tokens_per_batch=args.max_tokens_per_batch,
@@ -281,6 +359,19 @@ def main(argv=None):
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request queue deadline; requests still "
                          "queued past it expire instead of running")
+    # -- network serving (HTTP front-end + fleet) --
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve the fold API over HTTP on this address "
+                         "(port 0 = ephemeral; the bound address is "
+                         "printed as '# listening ...'); ignores --n and "
+                         "runs until SIGTERM/--serve-for-s")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the HTTP front-end; the "
+                         "router balances on live queue-depth/in-flight "
+                         "telemetry from each replica's registry")
+    ap.add_argument("--serve-for-s", type=float, default=0.0,
+                    help="with --listen: exit after this many seconds "
+                         "(0 = run until SIGTERM/SIGINT)")
     ap.add_argument("--driver", choices=["inline", "thread"],
                     default="inline",
                     help="pump the client inline after submitting, or on "

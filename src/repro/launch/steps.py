@@ -7,12 +7,10 @@
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.base import ArchConfig
 from repro.core.policy import AAQConfig, DISABLED
 from repro.core.schemes import FP16Baseline, QuantScheme
 from repro.models import lm

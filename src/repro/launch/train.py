@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import checkpointing as ckpt
 from repro.configs import get_config, reduce_config
 from repro.core.policy import AAQConfig, DISABLED
 from repro.data.pipeline import ShardInfo, SyntheticLM

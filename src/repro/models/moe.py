@@ -14,7 +14,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.configs.base import ArchConfig
 from repro.core.policy import AAQConfig, DISABLED
 from repro.kernels import dispatch
 from repro.models import common as cm

@@ -22,7 +22,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.schemes import FP16Baseline, QuantScheme
+from repro.core.schemes import QuantScheme
 from repro.kernels import dispatch
 from repro.models import common as cm
 from repro.parallel.sharding import constrain as _constrain

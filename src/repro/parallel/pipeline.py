@@ -17,8 +17,6 @@ to the stack for the archs where PP matters).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-
 from repro.checkpoint import checkpointing as ckpt
 from repro.data.pipeline import ShardInfo
 from repro.launch.mesh import make_mesh

@@ -35,6 +35,9 @@ from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
                                      static_batch_for)
 from repro.serving.types import (BatchDeviceOutput, FoldRequest, FoldResult,
                                  LazyDistogram, pad_to_bucket)
+# transport last: it builds on client/events/observability above
+from repro.serving.transport import (FleetRecord, FleetRouter,
+                                     FoldHTTPServer, ProtocolError, Replica)
 
 __all__ = [
     # lifecycle client
@@ -59,4 +62,7 @@ __all__ = [
     "Span", "Tracer", "span_tree", "pipeline_overlaps",
     "validate_chrome_trace", "MetricsRegistry", "MetricsServer",
     "PROMETHEUS_CONTENT_TYPE", "jax_profile",
+    # transport (HTTP front-end + fleet router)
+    "FoldHTTPServer", "FleetRouter", "FleetRecord", "Replica",
+    "ProtocolError",
 ]

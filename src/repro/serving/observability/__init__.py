@@ -15,7 +15,9 @@ Three zero-dependency pieces, threaded through the whole engine:
     (``--jax-profile``) and the optional stdlib scrape endpoint
     (``--metrics-port``).
 """
-from repro.serving.observability.httpd import MetricsServer
+from repro.serving.observability.httpd import (BackgroundHTTPServer,
+                                               MetricsServer, QuietHandler,
+                                               parse_hostport)
 from repro.serving.observability.profiler import (annotate, jax_profile,
                                                   step_annotation)
 from repro.serving.observability.registry import (FRACTION_BUCKETS,
@@ -34,5 +36,6 @@ __all__ = [
     "validate_chrome_trace", "PROC_REQUESTS", "PROC_ENGINE",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "LATENCY_BUCKETS", "FRACTION_BUCKETS", "PROMETHEUS_CONTENT_TYPE",
-    "MetricsServer", "annotate", "step_annotation", "jax_profile",
+    "MetricsServer", "BackgroundHTTPServer", "QuietHandler",
+    "parse_hostport", "annotate", "step_annotation", "jax_profile",
 ]

@@ -4,8 +4,6 @@ scenario — a mixed-priority trace with one cancellation and one expired
 deadline whose completed coords must be bitwise identical to the legacy
 ``FoldEngine.run`` path.
 """
-import threading
-
 import jax
 import numpy as np
 import pytest
@@ -18,7 +16,7 @@ from repro.serving import (AdmissionController, FoldClient, FoldEngine,
                            check_request_order)
 from repro.serving import events as ev
 from repro.serving.client import (ADMITTED, CANCELLED, DONE, EXPIRED, QUEUED,
-                                  RUNNING, TERMINAL_STATES)
+                                  RUNNING)
 
 CFG = reduce_ppm_config()
 PARAMS = init_ppm(jax.random.PRNGKey(0), CFG)

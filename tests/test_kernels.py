@@ -10,7 +10,6 @@ from repro.core.qtensor import unpack_int4
 from repro.kernels.aaq_matmul.ops import aaq_linear
 from repro.kernels.aaq_matmul.ref import aaq_matmul_ref
 from repro.kernels.aaq_quant.ops import aaq_quantize
-from repro.kernels.aaq_quant.ref import aaq_quantize_ref
 from repro.kernels.flash_attention.flash_attention import flash_mha_pallas
 from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
 

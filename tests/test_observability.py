@@ -9,7 +9,6 @@ import threading
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import reduce_ppm_config
 from repro.core import make_scheme

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (dequantize, fake_quant, pack_int4, qmatmul, qmax,
+from repro.core import (dequantize, pack_int4, qmatmul, qmax,
                         quant_rmse, quantize, unpack_int4)
 from repro.core.policy import AAQConfig, GROUP_A, GROUP_B, GROUP_C
 
