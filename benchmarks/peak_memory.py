@@ -1,21 +1,45 @@
-"""Paper Fig. 15: peak memory requirement vs sequence length.
+"""Paper Fig. 15: peak memory requirement vs sequence length — plus the
+long-fold max-foldable-N curve (``--curve``).
 
-Three execution modes of the SAME trunk, exact analytic peaks at full
-ESMFold scale (+ compiled memory_analysis cross-check at small Ns on CPU):
+Default mode (no args) reproduces the paper figure: three execution modes
+of the SAME trunk, exact analytic peaks at full ESMFold scale:
 
   baseline   — score tensor (H, Ns, Ns, Ns) materialized (vanilla PPM)
   chunk      — query-chunked attention (OpenFold-style LMA)
   lightnobel — token-wise MHA (never materialized) + AAQ-packed activations
+
+``--curve`` drives the *serving* admission controller instead of the
+analytic model: for every (scheme x chunking x mesh-shards) config it
+binary-searches the largest bucket N (multiples of 16) the controller
+ADMITS at batch 1 under ``--budget-mb``, using the same cost model the
+engine prices live requests with.  The result is the committed
+``BENCH_longfold.json`` artifact: how far each config's servable-N
+frontier reaches, plus the PR's acceptance check — N=2,048 REJECTED
+unchunked and ADMITTED (with the planner's chosen chunk) under the same
+budget.
+
+    PYTHONPATH=src python -m benchmarks.peak_memory --curve \
+        --out BENCH_longfold.json
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, gb
+import argparse
+import json
+
+from benchmarks.common import emit, gb, provenance
 from repro.configs import get_ppm_config
 from repro.core.schemes import AAQScheme, FP16Baseline
 from repro.models.ppm import pair_activation_inventory
 from repro.models.ppm.model import score_tensor_shape
 
 Q_CHUNK = 512
+
+#: the acceptance bucket from the PR story: a ~2,000-residue fold that no
+#: unchunked single-device config can admit at the default budget.
+ACCEPTANCE_N = 2048
+
+#: step of the max-N search grid (buckets are multiples of 16 in practice)
+N_STEP = 16
 
 
 def analytic_peaks(ns: int):
@@ -40,7 +64,146 @@ def analytic_peaks(ns: int):
     }
 
 
-def main():
+def _controller(cfg, scheme, budget_bytes: int, chunking: str, shards: int):
+    """An AdmissionController priced exactly like the serving engine's —
+    with the long-fold planner wired in when ``chunking`` says so."""
+    from repro.serving.admission import AdmissionController
+    from repro.serving.longfold import ChunkPolicy
+
+    adm = AdmissionController(cfg, scheme, mem_budget_bytes=budget_bytes,
+                              shards_for=lambda ns: shards)
+    policy = ChunkPolicy(chunking if chunking != "off" else "off",
+                         admission=adm)
+    adm.chunk_for = policy.chunk_for
+    return adm, policy
+
+
+def max_admittable_n(adm, lo: int = N_STEP, hi: int = 1 << 17) -> int:
+    """Largest N (multiple of N_STEP) with an ADMIT verdict at batch 1.
+
+    Admission cost is monotone in N for every estimator here (resident,
+    slab, and score terms all grow with N), so binary search is sound.
+    """
+    from repro.serving.admission import ADMIT
+
+    def ok(n: int) -> bool:
+        return adm.admit(n, 1).verdict == ADMIT
+
+    if not ok(lo):
+        return 0
+    lo_i, hi_i = lo // N_STEP, hi // N_STEP
+    while lo_i < hi_i:
+        mid = (lo_i + hi_i + 1) // 2
+        if ok(mid * N_STEP):
+            lo_i = mid
+        else:
+            hi_i = mid - 1
+    return lo_i * N_STEP
+
+
+def curve_main(args) -> dict:
+    from repro.core import make_scheme
+
+    cfg = get_ppm_config()
+    budget_bytes = int(args.budget_mb * 1e6)
+    rows = []
+    for scheme_name in ("baseline_fp16", "lightnobel_aaq"):
+        scheme = make_scheme(scheme_name)
+        for chunking in ("off", "auto"):
+            for shards in (1, 4):
+                adm, policy = _controller(cfg, scheme, budget_bytes,
+                                          chunking, shards)
+                max_n = max_admittable_n(adm)
+                chunk = (policy.chunk_for(max_n) or 0) if max_n else 0
+                est_mb = (adm.estimate_bytes(max_n, 1) / 1e6
+                          if max_n else None)
+                rows.append({
+                    "scheme": scheme_name, "chunking": chunking,
+                    "shards": shards, "max_n": max_n,
+                    "chunk_at_max": chunk,
+                    "est_mb_at_max": (round(est_mb, 1)
+                                      if est_mb is not None else None),
+                })
+                emit(f"peak_memory/curve/{scheme_name}/{chunking}/"
+                     f"shards{shards}", 0.0,
+                     f"max_n={max_n} chunk={chunk or 'off'} "
+                     f"est={est_mb:.0f}MB" if est_mb is not None
+                     else f"max_n={max_n}")
+
+    # the acceptance story: same budget, N=2048, chunked flips the verdict
+    scheme = make_scheme("lightnobel_aaq")
+    adm_off, _ = _controller(cfg, scheme, budget_bytes, "off", 1)
+    adm_auto, pol_auto = _controller(cfg, scheme, budget_bytes, "auto", 1)
+    d_off = adm_off.admit(ACCEPTANCE_N, 1)
+    d_auto = adm_auto.admit(ACCEPTANCE_N, 1)
+    acceptance = {
+        "n": ACCEPTANCE_N, "budget_mb": args.budget_mb,
+        "scheme": "lightnobel_aaq",
+        "unchunked": {"verdict": d_off.verdict,
+                      "est_mb": round(d_off.est_bytes / 1e6, 1)},
+        "chunked": {"verdict": d_auto.verdict,
+                    "chunk": d_auto.chunk_size,
+                    "estimator": d_auto.estimator,
+                    "est_mb": round(d_auto.est_bytes / 1e6, 1)},
+    }
+    emit(f"peak_memory/curve/acceptance/n{ACCEPTANCE_N}", 0.0,
+         f"unchunked={d_off.verdict} chunked={d_auto.verdict} "
+         f"chunk={d_auto.chunk_size}")
+
+    # regression tripwire: chunking must EXTEND the frontier, loudly
+    regressions = []
+    by_key = {(r["scheme"], r["shards"], r["chunking"]): r["max_n"]
+              for r in rows}
+    for (scheme_name, shards, chunking), max_n in by_key.items():
+        if chunking != "auto":
+            continue
+        off_n = by_key.get((scheme_name, shards, "off"), 0)
+        if max_n <= off_n:
+            regressions.append(f"{scheme_name}/shards{shards}: "
+                               f"chunked max_n {max_n} <= unchunked {off_n}")
+    if regressions:
+        print("#" * 72)
+        print("# LONG-FOLD REGRESSION: chunked execution no longer extends")
+        print("# the servable-N frontier — the planner or the cost model")
+        print("# has regressed:")
+        for r in regressions:
+            print(f"#   {r}")
+        print("#" * 72)
+
+    out = {
+        "provenance": provenance(),
+        "config": "ppm-full",
+        "budget_mb": args.budget_mb,
+        "n_step": N_STEP,
+        "curve": rows,
+        "acceptance": acceptance,
+        "regressions": regressions,
+    }
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"# curve -> {args.out}", flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--curve", action="store_true",
+                    help="max-admittable-N frontier per (scheme x chunking "
+                         "x shards) via the serving admission controller, "
+                         "instead of the analytic paper figure")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="per-device activation budget for --curve "
+                         "(default: the long-fold tier's 4096 MB)")
+    ap.add_argument("--out", default=None,
+                    help="with --curve: also write the frontier + "
+                         "acceptance JSON to this path")
+    args = ap.parse_args(argv)
+    if args.curve:
+        if args.budget_mb is None:
+            from repro.serving.longfold import DEFAULT_LONGFOLD_BUDGET_MB
+            args.budget_mb = DEFAULT_LONGFOLD_BUDGET_MB
+        return curve_main(args)
     for ns in (1024, 2034, 3364, 6879, 9945):
         peaks = analytic_peaks(ns)
         base = peaks["baseline"]

@@ -23,7 +23,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (footprint, accuracy, "
                          "peak_memory, compute_cost, latency, serving, "
-                         "transport)")
+                         "transport, longfold)")
     ap.add_argument("--out", default=None,
                     help="also write emitted rows to this JSON path")
     ap.add_argument("--kernels", choices=["pallas", "ref", "auto"],
@@ -47,6 +47,9 @@ def main(argv=None) -> None:
           "--trace-out", "BENCH_serving_trace.json"]),
         ("transport", transport, "HTTP front-end overhead (vs in-process)",
          ["--n", "6", "--max-len", "48", "--kernels", args.kernels]),
+        ("longfold", peak_memory,
+         "long-fold max-N frontier (chunked admission curve)",
+         ["--curve", "--out", "BENCH_longfold.json"]),
     )
     selected = (None if args.only is None
                 else {s.strip() for s in args.only.split(",") if s.strip()})

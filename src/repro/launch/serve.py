@@ -29,6 +29,8 @@ interpret mode.  ``--report`` rows record the backend each batch ran under.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --mode ppm \
         --buckets 32,64 --mesh 2x4 --shard-threshold 64
+    PYTHONPATH=src python -m repro.launch.serve --mode ppm \
+        --buckets 1024 --chunk-size auto --mem-budget-mb 512 --no-fidelity
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
 
 ``--listen HOST:PORT`` switches ppm mode into a network server: an HTTP
@@ -59,7 +61,7 @@ from repro.models.ppm import init_ppm, ppm_forward, tm_score
 from repro.serving import (CSV_HEADER, FleetRouter, FoldClient,
                            FoldHTTPServer, MetricsServer, csv_row,
                            jax_profile, make_serving_mesh, pad_to_bucket,
-                           parse_buckets)
+                           parse_buckets, parse_chunk_spec)
 from repro.serving.observability.httpd import parse_hostport
 
 
@@ -133,12 +135,14 @@ def serve_http(args, cfg, params, buckets) -> int:
             fidelity=not args.no_fidelity, kernels=args.kernels,
             mesh=make_serving_mesh(args.mesh), shard_threshold=args.shard_threshold,
             inflight_depth=args.inflight_depth,
-            linger_ms=args.batch_linger_ms)
+            linger_ms=args.batch_linger_ms,
+            chunk_size=args.chunk_size)
         client.tracer.set_metadata(
             replica=i, scheme=args.scheme,
             kernels=dispatch.describe(args.kernels), buckets=list(buckets),
             inflight_depth=args.inflight_depth,
-            **client.core.placement.describe())
+            **client.core.placement.describe(),
+            **client.core.chunk.describe())
         if args.warmup:
             client.warmup()
         return client
@@ -185,6 +189,11 @@ def serve_ppm(args):
         print(f"error: --buckets must be 'pow2' or comma-separated ints, "
               f"got {args.buckets!r}")
         return 2
+    try:
+        parse_chunk_spec(args.chunk_size)
+    except ValueError as e:
+        print(f"error: {e}")
+        return 2
     if args.no_engine:
         return _serve_ppm_sequential(args, cfg, params, seqs, buckets)
 
@@ -206,11 +215,13 @@ def serve_ppm(args):
         fidelity=not args.no_fidelity, kernels=args.kernels,
         mesh=mesh, shard_threshold=args.shard_threshold,
         inflight_depth=args.inflight_depth,
-        linger_ms=args.batch_linger_ms)
+        linger_ms=args.batch_linger_ms,
+        chunk_size=args.chunk_size)
     client.tracer.set_metadata(
         scheme=args.scheme, kernels=dispatch.describe(args.kernels),
         buckets=list(buckets), inflight_depth=args.inflight_depth,
-        **client.core.placement.describe())
+        **client.core.placement.describe(),
+        **client.core.chunk.describe())
     server = None
     if args.metrics_port is not None:
         server = MetricsServer(client, port=args.metrics_port).start()
@@ -238,12 +249,14 @@ def serve_ppm(args):
         print(csv_row(r))
     s = client.metrics.summary()
     placements = sorted({r.placement for r in results if r.ok})
+    chunks = sorted({r.chunk_size for r in results if r.ok})
     print(f"# served={s['served']}/{s['requests']} "
           f"rejected={s['rejected']} expired={s['expired']} "
           f"compiles={s['compiles']} "
           f"req/s={s['requests_per_s']:.2f} tok/s={s['tokens_per_s']:.1f} "
           f"kernels={dispatch.describe(args.kernels)} "
           f"placements={'/'.join(placements) or 'none'} "
+          f"chunks={'/'.join(str(c) for c in chunks) or 'none'} "
           f"max_est_act_mb={s['max_est_act_mb']:.1f}"
           + (f" budget_mb={args.mem_budget_mb:.1f}"
              if args.mem_budget_mb else ""))
@@ -340,6 +353,14 @@ def main(argv=None):
                     help="buckets >= this length run mesh-sharded over the "
                          "model axis; smaller buckets stay single-device "
                          "(requires --mesh)")
+    ap.add_argument("--chunk-size", default="off", metavar="{off,auto,N}",
+                    help="long-fold chunked trunk execution: 'off' (default) "
+                         "runs the unchunked pair stack, an integer N runs "
+                         "row-chunked scans with that chunk on buckets > N, "
+                         "and 'auto' lets the memory planner pick the "
+                         "largest chunk per bucket that fits "
+                         "--mem-budget-mb (falling back to unchunked when "
+                         "the full slab already fits)")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile every bucket at its launch cap; "
                          "occupancy-fitted sizes below the cap still "

@@ -49,13 +49,17 @@ def input_embedding(p, aatype: jax.Array, cfg: PPMConfig):
 
 def ppm_forward(params, aatype: jax.Array, cfg: PPMConfig,
                 scheme: QuantScheme | None = None, *, mask: jax.Array | None = None,
-                remat: bool = False):
+                remat: bool = False, chunk_size: int | None = None):
     """Full forward pass. Returns dict with coords, distogram, s, z.
 
     ``mask`` (B, N) bool marks real tokens when ``aatype`` is padded to a
     serving bucket; ``None`` is the legacy unmasked path.  Masking is
     non-rescaling (see trunk helpers), so coords/s at real positions are
     bitwise identical to an unpadded forward of the same sequence.
+
+    ``chunk_size`` routes the trunk through the row-chunked pair stack
+    (repro.models.ppm.chunking) — the long-fold path the memory planner
+    prices; None/0 is the unchunked path.
     """
     scheme = scheme or FP16Baseline()
     if mask is not None:
@@ -66,7 +70,7 @@ def ppm_forward(params, aatype: jax.Array, cfg: PPMConfig,
         s_in = s0 + (cm.layernorm(params["recycle_s_ln"], s) if r else 0.0)
         z_in = z0 + (cm.layernorm(params["recycle_z_ln"], z) if r else 0.0)
         s, z = tk.trunk_apply(params["trunk"], s_in, z_in, cfg, scheme,
-                              remat=remat, mask=mask)
+                              remat=remat, mask=mask, chunk_size=chunk_size)
     coords, s_final = st.structure_apply(params["structure"], s, z,
                                          n_iter=cfg.ipa_iters, mask=mask)
     zsym = 0.5 * (z + jnp.swapaxes(z, 1, 2))

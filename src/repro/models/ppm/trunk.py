@@ -238,7 +238,10 @@ def pair_transition_apply(p, z, scheme: QuantScheme, sc: str = "pair_trans"):
 # --------------------------------------------------------------------------
 # sequence ops (not quantized — paper quantizes only pair dataflow)
 # --------------------------------------------------------------------------
-def seq_attn_apply(p, s, z, heads: int, mask=None):
+def seq_attn_apply(p, s, z, heads: int, mask=None, pair_bias=None):
+    """``pair_bias`` lets the chunked path supply a pre-built (B,N,N,H)
+    bias table (see chunking.seq_pair_bias_chunked); the inline projection
+    below is the legacy unchunked path, bit-for-bit unchanged."""
     b_, n, hm = s.shape
     dh = hm // heads
     sl = cm.layernorm(p["ln"], s)
@@ -249,7 +252,8 @@ def seq_attn_apply(p, s, z, heads: int, mask=None):
     v = v.reshape(b_, n, heads, dh)
     if mask is not None:
         v = v * mask[:, :, None, None].astype(v.dtype)
-    bias = cm.dense(p["pair_bias"], cm.layernorm(p["pair_bias_ln"], z))
+    bias = pair_bias if pair_bias is not None else cm.dense(
+        p["pair_bias"], cm.layernorm(p["pair_bias_ln"], z))
     bias = jnp.transpose(bias, (0, 3, 1, 2)).astype(jnp.float32)  # (B,H,N,N)
     if mask is not None:
         # additive key-padding fold keeps masking non-rescaling: real keys
@@ -298,11 +302,23 @@ def init_trunk(key, cfg: PPMConfig) -> cm.Params:
 
 
 def trunk_apply(stacked, s, z, cfg: PPMConfig, scheme: QuantScheme,
-                remat: bool = False, mask=None):
-    def body(carry, p):
-        s_, z_ = carry
-        s_, z_ = block_apply(p, s_, z_, cfg, scheme, mask=mask)
-        return (_constrain(s_, "seq_track"), _constrain(z_, "pair")), None
+                remat: bool = False, mask=None, chunk_size: int | None = None):
+    """``chunk_size`` routes every block through the row-chunked pair stack
+    (repro.models.ppm.chunking): same ops, same sites, O(N·chunk) slabs
+    instead of O(N²).  None/0 is the legacy unchunked path."""
+    if chunk_size:
+        from repro.models.ppm import chunking as ck   # imports this module
+
+        def body(carry, p):
+            s_, z_ = carry
+            s_, z_ = ck.block_apply_chunked(p, s_, z_, cfg, scheme,
+                                            chunk_size, mask=mask)
+            return (_constrain(s_, "seq_track"), _constrain(z_, "pair")), None
+    else:
+        def body(carry, p):
+            s_, z_ = carry
+            s_, z_ = block_apply(p, s_, z_, cfg, scheme, mask=mask)
+            return (_constrain(s_, "seq_track"), _constrain(z_, "pair")), None
 
     if remat:
         body = jax.checkpoint(body)

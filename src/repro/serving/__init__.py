@@ -19,6 +19,8 @@ from repro.serving.engine import (BatchExecutionError, EngineCore,
 from repro.serving.events import (EVENT_KINDS, EVENT_ORDER, TERMINAL_EVENTS,
                                   EventBus, EventStream, FoldEvent,
                                   check_request_order)
+from repro.serving.longfold import (DEFAULT_LONGFOLD_BUDGET_MB, ChunkPolicy,
+                                    chunk_candidates, parse_chunk_spec)
 from repro.serving.metrics import (CSV_HEADER, CompileWatcher, EngineMetrics,
                                    csv_row, percentiles,
                                    reset_compile_watch)
@@ -50,6 +52,9 @@ __all__ = [
     # placement (mesh-sharded serving)
     "Placement", "PlacementPolicy", "SINGLE", "SHARDED",
     "make_serving_mesh", "parse_mesh_spec",
+    # long-fold tier (chunked-trunk memory planning)
+    "ChunkPolicy", "parse_chunk_spec", "chunk_candidates",
+    "DEFAULT_LONGFOLD_BUDGET_MB",
     # engine core + legacy wrapper
     "EngineCore", "FoldEngine", "FoldRequest", "FoldResult",
     "InFlightBatch", "BatchExecutionError", "LazyDistogram",

@@ -21,6 +21,19 @@ over ``model``.  ``mem_budget_bytes`` is therefore a per-device budget: a
 bucket that busts it solo on one device is *admitted* once sharding fits
 its share, which is the paper's long-sequence scalability story expressed
 as a scheduling verdict.
+
+Chunked-path accounting (the long-fold tier): when ``chunk_for`` (wired
+from ``repro.serving.longfold.ChunkPolicy``) reports a chunk for a bucket,
+the estimate switches to the row-chunked execution model implemented by
+``repro.models.ppm.chunking``: the per-op working set is one O(N·chunk)
+slab of the pair inventory (at scheme bits), plus the tensors that stay
+resident across a chunk scan — the pair residual stream, tri-mul's
+full-width partner operand, the attention-bias tables — plus the score
+slab for ``chunk`` rows in flight.  Both estimators share ONE score-slab
+model (``_score_slab_bytes``): rows × heads × min(q_chunk, N) × N fp32,
+with rows = N token-wise unchunked and rows = chunk chunked, so the two
+cost models cannot diverge.  Every decision records which estimator priced
+it (``AdmissionDecision.estimator``) for the ``on_decision`` telemetry.
 """
 from __future__ import annotations
 
@@ -37,6 +50,11 @@ REJECT = "reject"
 
 _SCORE_DTYPE_BYTES = 4          # fp32 logits/probs in both attention paths
 
+#: sentinel: resolve the chunk via the wired ``chunk_for`` policy.  Callers
+#: pass an explicit ``chunk=None`` to force unchunked pricing (the planner
+#: itself does, when deciding whether chunking is needed at all).
+POLICY = object()
+
 
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
@@ -45,6 +63,8 @@ class AdmissionDecision:
     budget_bytes: int | None
     reason: str = ""
     shards: int = 1
+    chunk_size: int = 0         # 0 = priced unchunked
+    estimator: str = "cubic"    # cubic | q_chunk | chunked:<C>
 
     def event_data(self) -> dict:
         """Telemetry payload for the client's DEFERRED/REJECTED events."""
@@ -54,6 +74,8 @@ class AdmissionDecision:
             "budget_mb": (None if self.budget_bytes is None
                           else self.budget_bytes / 1e6),
             "shards": self.shards,
+            "chunk_size": self.chunk_size,
+            "estimator": self.estimator,
             "reason": self.reason,
         }
 
@@ -64,19 +86,24 @@ class AdmissionController:
     ``shards_for`` (bucket -> model-axis shard count, wired from the
     engine's ``PlacementPolicy``) turns every estimate into the per-device
     share; absent, everything is priced single-device (shards = 1).
+    ``chunk_for`` (bucket -> chunk size or None, wired from the engine's
+    ``ChunkPolicy``) routes buckets the planner chunks through the
+    chunked-path estimator; absent, everything is priced unchunked.
     """
 
     def __init__(self, cfg, scheme: QuantScheme,
                  mem_budget_bytes: int | None = None, *,
                  chunked_len: int = CHUNKED_ATTN_LEN, q_chunk: int = 512,
-                 shards_for: Callable[[int], int] | None = None):
+                 shards_for: Callable[[int], int] | None = None,
+                 chunk_for: Callable[[int], int | None] | None = None):
         self.cfg = cfg
         self.scheme = scheme
         self.mem_budget_bytes = mem_budget_bytes
         self.chunked_len = chunked_len
         self.q_chunk = q_chunk
         self.shards_for = shards_for
-        self._cache: dict[tuple[int, int, int], int] = {}
+        self.chunk_for = chunk_for
+        self._cache: dict[tuple[int, int, int, int], int] = {}
         #: optional observer called on EVERY decision (including scheduler
         #: probes — a metrics series counting verdicts sees probe traffic
         #: too, which is the point: DEFER pressure shows up before drops)
@@ -89,37 +116,65 @@ class AdmissionController:
             return max(1, self.shards_for(ns))
         return 1
 
+    def _chunk(self, ns: int, chunk) -> int | None:
+        if chunk is not POLICY:
+            return chunk or None
+        if self.chunk_for is not None:
+            return self.chunk_for(ns)
+        return None
+
+    def estimator_for(self, ns: int, chunk: int | None) -> str:
+        if chunk:
+            return f"chunked:{chunk}"
+        return "q_chunk" if ns >= self.chunked_len else "cubic"
+
     # -- pricing ----------------------------------------------------------
     def estimate_bytes(self, ns: int, batch: int = 1,
-                       shards: int | None = None) -> int:
+                       shards: int | None = None, chunk=POLICY) -> int:
         """Estimated peak activation bytes for one (bucket=ns, batch) step,
         per device (``ceil(total / shards)`` under a sharded placement)."""
         k = self._shards(ns, shards)
-        key = (ns, batch, k)
+        c = self._chunk(ns, chunk)
+        key = (ns, batch, k, c or 0)
         if key not in self._cache:
-            self._cache[key] = -(-self._total_bytes(ns, batch) // k)
+            self._cache[key] = -(-self._total_bytes(ns, batch, c) // k)
         return self._cache[key]
 
-    def _total_bytes(self, ns: int, batch: int) -> int:
+    def _total_bytes(self, ns: int, batch: int, chunk: int | None = None) -> int:
+        if chunk:
+            return self._chunked_total_bytes(ns, batch, chunk)
         return (self._pair_bytes(ns, batch)
                 + self._score_bytes(ns, batch)
                 + self._residual_bytes(ns, batch))
 
-    def _pair_bytes(self, ns: int, batch: int) -> int:
+    def _pair_bytes(self, ns: int, batch: int, chunk: int | None = None) -> int:
+        """Pair-inventory bytes; with ``chunk`` the per-op working set is
+        one (batch, chunk, ns, H) row slab instead of the full tensor."""
         inv = pair_activation_inventory(self.cfg, ns, batch)
+        if chunk:
+            inv = [(site, (shape[0], min(chunk, shape[1]), *shape[2:]))
+                   for site, shape in inv]
         return sum(self.scheme.act_bytes(site, shape) for site, shape in inv)
 
+    def _score_slab_bytes(self, ns: int, batch: int, rows: int) -> int:
+        """THE attention-slab model, shared by both estimators: ``rows``
+        q-rows in flight at once (ns on the token-wise unchunked path, the
+        chunk size on the chunked path) x a min(q_chunk, ns)-query window x
+        ns keys, fp32, per head.  For ns <= q_chunk and rows = ns this is
+        exactly b*h*ns^3, so the cubic small-bucket model below coincides
+        with it and the chunked_len threshold choice only matters for
+        buckets past q_chunk.  A pallas-backend engine routing
+        ns < chunked_len through the token-wise path therefore needs no
+        pricing override."""
+        h = score_tensor_shape(self.cfg, ns, batch)[1]
+        return batch * rows * h * min(self.q_chunk, ns) * ns * _SCORE_DTYPE_BYTES
+
     def _score_bytes(self, ns: int, batch: int) -> int:
-        # NOTE: for ns <= q_chunk the two models coincide exactly
-        # (batch*ns*h*min(q_chunk,ns)*ns == b*h*ns^3), so the threshold
-        # choice only matters for buckets past q_chunk — which are already
-        # >= chunked_len.  A pallas-backend engine routing ns < chunked_len
-        # through the token-wise path therefore needs no pricing override.
-        b, h, *_ = score_tensor_shape(self.cfg, ns, batch)
         if ns >= self.chunked_len:
             # token-wise MHA: rows are batch, the score slab is only ever
             # (batch*ns, h, q_chunk, ns)
-            return batch * ns * h * min(self.q_chunk, ns) * ns * _SCORE_DTYPE_BYTES
+            return self._score_slab_bytes(ns, batch, ns)
+        b, h, *_ = score_tensor_shape(self.cfg, ns, batch)
         return b * h * ns ** 3 * _SCORE_DTYPE_BYTES
 
     def _residual_bytes(self, ns: int, batch: int) -> int:
@@ -127,25 +182,54 @@ class AdmissionController:
         itemsize = self.cfg.np_dtype.itemsize
         return batch * ns * ns * self.cfg.hz * itemsize
 
+    def _chunked_resident_bytes(self, ns: int, batch: int) -> int:
+        """Full-width tensors a chunked block keeps resident across the
+        row scan: the pair residual stream (fp), tri-mul's partner operand
+        (at the scheme's ab bits — chunking.tri_mul_chunked materializes
+        it once per op), and the tri/seq attention-bias tables (fp32,
+        heads-wide so small)."""
+        cfg = self.cfg
+        partner = self.scheme.act_bytes(
+            "tri_mul_out.ab", (batch, ns, ns, cfg.tri_hidden))
+        bias = batch * ns * ns * (cfg.pair_heads + cfg.seq_heads) * _SCORE_DTYPE_BYTES
+        return self._residual_bytes(ns, batch) + partner + bias
+
+    def _chunked_total_bytes(self, ns: int, batch: int, chunk: int) -> int:
+        if ns >= self.chunked_len:
+            score = self._score_slab_bytes(ns, batch, min(chunk, ns))
+        else:
+            # einsum path: explicit (b, h, chunk, ns, ns) logits per chunk
+            h = score_tensor_shape(self.cfg, ns, batch)[1]
+            score = batch * h * min(chunk, ns) * ns * ns * _SCORE_DTYPE_BYTES
+        return (self._chunked_resident_bytes(ns, batch)
+                + self._pair_bytes(ns, batch, chunk)
+                + score)
+
     # -- policy -----------------------------------------------------------
-    def admit(self, ns: int, batch: int,
-              shards: int | None = None) -> AdmissionDecision:
+    def admit(self, ns: int, batch: int, shards: int | None = None,
+              chunk=POLICY) -> AdmissionDecision:
         k = self._shards(ns, shards)
-        est = self.estimate_bytes(ns, batch, k)
+        c = self._chunk(ns, chunk)
+        est = self.estimate_bytes(ns, batch, k, chunk=c)
+        estimator = self.estimator_for(ns, c)
         per_dev = f"/device over {k} shards" if k > 1 else ""
+        chunked = f" (chunk {c})" if c else ""
         if self.mem_budget_bytes is None or est <= self.mem_budget_bytes:
             d = AdmissionDecision(ADMIT, est, self.mem_budget_bytes,
-                                  shards=k)
+                                  shards=k, chunk_size=c or 0,
+                                  estimator=estimator)
         elif batch <= 1:
             d = AdmissionDecision(
                 REJECT, est, self.mem_budget_bytes,
-                f"bucket {ns} needs ~{est / 1e6:.1f}MB{per_dev} alone; "
-                f"budget {self.mem_budget_bytes / 1e6:.1f}MB", shards=k)
+                f"bucket {ns} needs ~{est / 1e6:.1f}MB{per_dev}{chunked} "
+                f"alone; budget {self.mem_budget_bytes / 1e6:.1f}MB",
+                shards=k, chunk_size=c or 0, estimator=estimator)
         else:
             d = AdmissionDecision(
                 DEFER, est, self.mem_budget_bytes,
-                f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB{per_dev} "
-                f"over budget", shards=k)
+                f"batch {batch} x bucket {ns} ~{est / 1e6:.1f}MB{per_dev}"
+                f"{chunked} over budget", shards=k, chunk_size=c or 0,
+                estimator=estimator)
         if self.on_decision is not None:
             self.on_decision(d, ns, batch)
         return d
@@ -158,17 +242,21 @@ class AdmissionController:
                 return b
         return 0
 
-    def explain(self, ns: int, batch: int = 1,
-                shards: int | None = None) -> dict:
+    def explain(self, ns: int, batch: int = 1, shards: int | None = None,
+                chunk=POLICY) -> dict:
         """Breakdown for reports/debugging (MB, not bytes)."""
         k = self._shards(ns, shards)
+        c = self._chunk(ns, chunk)
         return {
             "bucket": ns, "batch": batch, "shards": k,
-            "pair_mb": self._pair_bytes(ns, batch) / 1e6,
+            "chunk_size": c or 0,
+            "estimator": self.estimator_for(ns, c),
+            "pair_mb": self._pair_bytes(ns, batch, c) / 1e6,
             "score_mb": self._score_bytes(ns, batch) / 1e6,
             "residual_mb": self._residual_bytes(ns, batch) / 1e6,
-            "total_mb": self._total_bytes(ns, batch) / 1e6,
-            "per_device_mb": self.estimate_bytes(ns, batch, k) / 1e6,
+            "resident_mb": self._chunked_resident_bytes(ns, batch) / 1e6,
+            "total_mb": self._total_bytes(ns, batch, c) / 1e6,
+            "per_device_mb": self.estimate_bytes(ns, batch, k, chunk=c) / 1e6,
             "budget_mb": (None if self.mem_budget_bytes is None
                           else self.mem_budget_bytes / 1e6),
             "scheme": self.scheme.name,

@@ -177,6 +177,7 @@ class FoldClient:
                  mem_budget_mb: float | None = None, fidelity: bool = False,
                  kernels: str | None = None, keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
+                 chunk_size: int | str | None = None,
                  inflight_depth: int = 2, linger_ms: float = 0.0,
                  clock: Callable[[], float] = time.monotonic,
                  core: EngineCore | None = None):
@@ -189,14 +190,14 @@ class FoldClient:
                 fidelity=fidelity,
                 kernels=dispatch.AUTO if kernels is None else kernels,
                 keep_distogram=keep_distogram, mesh=mesh,
-                shard_threshold=shard_threshold,
+                shard_threshold=shard_threshold, chunk_size=chunk_size,
                 inflight_depth=inflight_depth, clock=clock)
         self.core = core
         self.clock = core.clock
         self.scheduler = TokenBudgetScheduler(
             core.buckets, max_tokens_per_batch=core.max_tokens_per_batch,
             max_batch=core.max_batch, admission=core.admission,
-            placement=core.placement, linger_ms=linger_ms)
+            placement=core.placement, chunk=core.chunk, linger_ms=linger_ms)
         # the pump's own FIFO mirror of dispatched-not-retired batches: the
         # client terminates handles from THIS deque, so a retire failure
         # (or a monkeypatched core) can never desync results from handles
@@ -439,7 +440,8 @@ class FoldClient:
                                      bucket=batch.bucket,
                                      batch_size=batch.batch_size,
                                      est_mb=batch.est_bytes / 1e6,
-                                     placement=batch.placement)
+                                     placement=batch.placement,
+                                     chunk_size=batch.chunk_size)
                 t_start = self.clock()
                 for req in batch.requests:
                     h = self.handles[req.request_id]
@@ -449,7 +451,8 @@ class FoldClient:
                         thread=f"req-{req.request_id}",
                         parent=h.spans.get("request"), t=t_start,
                         bucket=batch.bucket, batch_size=batch.batch_size,
-                        placement=batch.placement)
+                        placement=batch.placement,
+                        chunk_size=batch.chunk_size)
                     self.events.emit(ev.BATCH_START, req.request_id,
                                      bucket=batch.bucket, batch=ids)
                 self.core.metrics.record_queue_depth(self.scheduler.pending)
@@ -487,7 +490,7 @@ class FoldClient:
             status=R_FAILED, priority=r.priority,
             reason=f"batch execution failed: {e!r}",
             bucket=batch.bucket, batch_size=len(batch.requests),
-            placement=batch.placement)
+            placement=batch.placement, chunk_size=batch.chunk_size)
             for r in batch.requests]
         for res in results:
             self.core.metrics.record(res)

@@ -33,7 +33,7 @@ Core responsibilities:
   * length buckets — every request is right-padded to its bucket edge, so
     the XLA shape space is the bucket set, not the set of observed lengths;
   * a compiled-executable cache keyed by ``(bucket, launch_batch, scheme,
-    placement)``.  ``batch_for_bucket`` (token budget, max-batch cap, and
+    placement, chunk)``.  ``batch_for_bucket`` (token budget, max-batch cap, and
     the admission controller's memory cap) is the launch-size CAP; each
     batch launches at its occupancy fit — the real request count, or a
     slightly larger already-compiled size when the extra dummy rows are
@@ -97,6 +97,7 @@ from repro.kernels import dispatch
 from repro.models.ppm import ppm_forward, tm_score
 from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
 from repro.serving.admission import AdmissionController
+from repro.serving.longfold import ChunkPolicy
 from repro.serving.metrics import EngineMetrics, reset_compile_watch
 from repro.serving.observability.profiler import annotate
 from repro.serving.observability.tracing import PROC_ENGINE, Tracer
@@ -125,6 +126,7 @@ class InFlightBatch:
     bucket: int
     launched_b: int                    # rows the executable runs
     placement: Any
+    chunk_size: int                    # 0 = unchunked trunk
     out: dict                          # device outputs (unblocked futures)
     fp_out: dict | None                # async fidelity re-run (or None)
     compile_s: float
@@ -148,6 +150,7 @@ class EngineCore:
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
+                 chunk_size: int | str | None = None,
                  inflight_depth: int = 2,
                  clock: Callable[[], float] = time.monotonic,
                  tracer: Tracer | None = None):
@@ -181,6 +184,12 @@ class EngineCore:
         self.admission = AdmissionController(
             cfg, self.scheme, budget, chunked_len=CHUNKED_ATTN_LEN,
             shards_for=self.placement.shards_for)
+        # the long-fold planner: decides per bucket whether the trunk runs
+        # row-chunked and at what size, priced against this same admission
+        # controller — and wires itself back in so every admission estimate
+        # for a chunked bucket uses the chunked-path cost model
+        self.chunk = ChunkPolicy(chunk_size, admission=self.admission)
+        self.admission.chunk_for = self.chunk.chunk_for
         self.inflight_depth = inflight_depth
         self._inflight: deque[InFlightBatch] = deque()
         self.metrics = EngineMetrics()
@@ -192,13 +201,14 @@ class EngineCore:
         # registry; late-bound through self.metrics because run() swaps the
         # metrics object per trace
         self.admission.on_decision = (
-            lambda d, ns, b: self.metrics.record_admission(d.verdict, ns))
+            lambda d, ns, b: self.metrics.record_admission(
+                d.verdict, ns, estimator=d.estimator))
         # a fresh engine starts a fresh compile-watch epoch: watchers marked
         # during a PREVIOUS engine's lifetime can't count its compiles here
         reset_compile_watch()
         self._fp_scheme = FP16Baseline()
-        # key: (bucket, launch_batch, scheme.name, placement.label)
-        self._executables: dict[tuple[int, int, str, str], object] = {}
+        # key: (bucket, launch_batch, scheme.name, placement.label, chunk)
+        self._executables: dict[tuple[int, int, str, str, int], object] = {}
         self._placed_params: dict[str, object] = {}
         self._compile_count = 0
 
@@ -226,9 +236,11 @@ class EngineCore:
         and pipelined runs launch identical shapes."""
         cap = self.batch_for_bucket(bucket)
         n = min(n, cap)
-        cached = sorted(b for (bk, b, sn, pl) in self._executables
+        chunk = self.chunk.chunk_for(bucket) or 0
+        cached = sorted(b for (bk, b, sn, pl, ck) in self._executables
                         if bk == bucket and sn == scheme.name
-                        and pl == placement.label and b >= n)
+                        and pl == placement.label and ck == chunk
+                        and b >= n)
         for b in cached:
             if b - n <= max(1, n // 2):
                 return b
@@ -248,17 +260,21 @@ class EngineCore:
         executable (interpret mode off-TPU).  The placement label is part
         of the cache key: routing a bucket to the mesh is a distinct
         executable, and repeated batches of the same (bucket, batch,
-        scheme, placement) never recompile.
+        scheme, placement) never recompile.  So is the chunk the long-fold
+        planner picked for this bucket — the chunk plan is a function of
+        the bucket alone, so steady-state chunked serving also performs
+        zero recompilations.
         """
         placement = self.placement.placement_for(bucket)
-        key = (bucket, batch, scheme.name, placement.label)
+        chunk = self.chunk.chunk_for(bucket) or 0
+        key = (bucket, batch, scheme.name, placement.label, chunk)
         if key in self._executables:
             return self._executables[key], 0.0
         aat = jax.ShapeDtypeStruct((batch, bucket), jnp.int32)
         msk = jax.ShapeDtypeStruct((batch, bucket), jnp.bool_)
         t0 = time.perf_counter()
         with dispatch.use_backend(self.kernels):
-            fwd = partial(self._forward, scheme)
+            fwd = partial(self._forward, scheme, chunk)
             if placement.sharded:
                 compiled = lower_sharded(placement, fwd, self.params,
                                          aat, msk)
@@ -282,20 +298,32 @@ class EngineCore:
             self._placed_params[placement.label] = placed
         return self._placed_params[placement.label]
 
-    def _forward(self, scheme, params, aatype, mask):
-        return ppm_forward(params, aatype, self.cfg, scheme, mask=mask)
+    def _forward(self, scheme, chunk, params, aatype, mask):
+        return ppm_forward(params, aatype, self.cfg, scheme, mask=mask,
+                           chunk_size=chunk or None)
 
-    def warmup(self) -> None:
-        """Pre-compile every bucket at its launch-size cap (and its FP twin
-        if fidelity is on) — the shape saturated traffic runs at.
-        Occupancy-fitted sizes below the cap still compile on their first
-        appearance (each once; the waste guard reuses nearby cached sizes
-        for trailing batches)."""
+    def warmup(self, ladder: tuple[int, ...] | None = None) -> None:
+        """Pre-compile a size LADDER of (bucket, launch_batch) executables
+        (and their FP twins if fidelity is on): by default {1, cap//2, cap}
+        per bucket — the saturated shape, the half-full shape batches decay
+        through as traffic drains, and the solo shape a lone long request
+        launches at.  With the cap-only warmup this engine used to have,
+        that first solo request ate a cold multi-second compile in
+        queue_wait; now it hits the cache.  Chunked buckets warm their
+        chunked executables automatically (the chunk plan is consulted
+        inside ``_executable``).  Occupancy-fitted sizes off the ladder
+        still compile on their first appearance (each once; the waste guard
+        reuses nearby cached sizes for trailing batches)."""
         for bucket in self.buckets:
             cap = self.batch_for_bucket(bucket)
-            self._executable(bucket, cap, self.scheme)
-            if self.fidelity:
-                self._executable(bucket, cap, self._fp_scheme)
+            if cap < 1:
+                continue                    # bucket over budget even solo
+            sizes = ({1, max(1, cap // 2), cap} if ladder is None
+                     else {min(cap, max(1, s)) for s in ladder})
+            for b in sorted(sizes):
+                self._executable(bucket, b, self.scheme)
+                if self.fidelity:
+                    self._executable(bucket, b, self._fp_scheme)
 
     # -- pipelined execution ----------------------------------------------
     @property
@@ -378,12 +406,13 @@ class EngineCore:
         except Exception as e:
             tr.end(d_span, status="failed", error=repr(e))
             raise
+        chunk = self.chunk.chunk_for(bucket) or 0
         tr.end(d_span, launch_batch=launched_b,
                occupancy=real_tokens / (launched_b * bucket),
-               placement=placement.label)
+               placement=placement.label, chunk_size=chunk)
         flight = InFlightBatch(
             batch=batch, bucket=bucket, launched_b=launched_b,
-            placement=placement, out=out, fp_out=fp_out,
+            placement=placement, chunk_size=chunk, out=out, fp_out=fp_out,
             compile_s=compile_s, batch_start=batch_start,
             t_launch=t_launch,
             est=self.admission.estimate_bytes(bucket, launched_b),
@@ -478,7 +507,8 @@ class EngineCore:
                 occupancy=flight.occupancy,
                 est_activation_bytes=flight.est,
                 kernel_backend=flight.backend,
-                placement=flight.placement.label))
+                placement=flight.placement.label,
+                chunk_size=flight.chunk_size))
         for r in results:
             self.metrics.record(r)
         return results
@@ -512,6 +542,7 @@ class FoldEngine:
                  fidelity: bool = False, kernels: str = dispatch.AUTO,
                  keep_distogram: bool = True,
                  mesh=None, shard_threshold: int | None = None,
+                 chunk_size: int | str | None = None,
                  inflight_depth: int = 2, linger_ms: float = 0.0,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.client import FoldClient
@@ -520,7 +551,8 @@ class FoldEngine:
             max_tokens_per_batch=max_tokens_per_batch, max_batch=max_batch,
             mem_budget_mb=mem_budget_mb, fidelity=fidelity, kernels=kernels,
             keep_distogram=keep_distogram, mesh=mesh,
-            shard_threshold=shard_threshold, inflight_depth=inflight_depth,
+            shard_threshold=shard_threshold, chunk_size=chunk_size,
+            inflight_depth=inflight_depth,
             linger_ms=linger_ms, clock=clock)
         self.core = self.client.core
 
@@ -533,6 +565,7 @@ class FoldEngine:
     fidelity = property(lambda self: self.core.fidelity)
     admission = property(lambda self: self.core.admission)
     placement = property(lambda self: self.core.placement)
+    chunk = property(lambda self: self.core.chunk)
     scheduler = property(lambda self: self.client.scheduler)
     metrics = property(lambda self: self.core.metrics)
     compile_count = property(lambda self: self.core.compile_count)
@@ -543,8 +576,8 @@ class FoldEngine:
     def batch_for_bucket(self, bucket: int) -> int:
         return self.core.batch_for_bucket(bucket)
 
-    def warmup(self) -> None:
-        self.core.warmup()
+    def warmup(self, ladder: tuple[int, ...] | None = None) -> None:
+        self.core.warmup(ladder)
 
     # -- legacy request lifecycle -----------------------------------------
     def submit(self, seq) -> int:

@@ -151,7 +151,7 @@ class BucketStats:
 
 CSV_HEADER = ("request,len,bucket,batch,status,priority,queue_ms,compile_ms,"
               "run_ms,tm_vs_fp,padding_frac,occupancy,est_act_mb,"
-              "kernel_backend,placement")
+              "kernel_backend,placement,chunk_size")
 
 
 def csv_row(r: FoldResult) -> str:
@@ -161,7 +161,7 @@ def csv_row(r: FoldResult) -> str:
             f"{r.queue_wait_ms:.1f},{r.compile_ms:.1f},{r.run_ms:.1f},{tm},"
             f"{r.padding_frac:.3f},{r.occupancy:.3f},"
             f"{r.est_activation_bytes / 1e6:.1f},"
-            f"{r.kernel_backend},{r.placement}")
+            f"{r.kernel_backend},{r.placement},{r.chunk_size}")
 
 
 class EngineMetrics:
@@ -218,7 +218,7 @@ class EngineMetrics:
             "fold_linger_holds_total", "Scheduler fill-or-timeout holds")
         self._m_admission = reg.counter(
             "fold_admission_decisions_total", "Admission verdicts",
-            ("verdict", "bucket"))
+            ("verdict", "bucket", "estimator"))
         self._m_queue_depth = reg.gauge(
             "fold_queue_depth", "Requests pending in scheduler queues")
         self._m_pinned = reg.gauge(
@@ -308,9 +308,13 @@ class EngineMetrics:
         if delta > 0:
             self._m_linger.inc(delta)
 
-    def record_admission(self, verdict: str, bucket: int) -> None:
-        """One admission decision (ADMIT/REJECT/DEFER), including probes."""
-        self._m_admission.inc(verdict=verdict, bucket=bucket)
+    def record_admission(self, verdict: str, bucket: int,
+                         estimator: str = "cubic") -> None:
+        """One admission decision (ADMIT/REJECT/DEFER), including probes.
+        ``estimator`` names the cost model that priced it (cubic | q_chunk
+        | chunked:<C>), so chunked-vs-unchunked verdict mix is scrapeable."""
+        self._m_admission.inc(verdict=verdict, bucket=bucket,
+                              estimator=estimator)
 
     def record_queue_depth(self, n: int) -> None:
         self._m_queue_depth.set(n)
@@ -405,6 +409,7 @@ class EngineMetrics:
             "est_activation_bytes": r.est_activation_bytes,
             "kernel_backend": r.kernel_backend,
             "placement": r.placement,
+            "chunk_size": r.chunk_size,
         }
 
     def save(self, path: str) -> None:

@@ -115,6 +115,8 @@ class ScheduledBatch:
                                        # admission stopped this batch's growth
     placement: str = "single"          # PlacementPolicy label this bucket's
                                        # executable runs under
+    chunk_size: int = 0                # long-fold ChunkPolicy plan for this
+                                       # bucket (0 = unchunked trunk)
 
     @property
     def batch_size(self) -> int:
@@ -131,7 +133,8 @@ class TokenBudgetScheduler:
     def __init__(self, buckets: tuple[int, ...], *,
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  admission: AdmissionController | None = None,
-                 placement=None, linger_ms: float = 0.0, tracer=None):
+                 placement=None, chunk=None, linger_ms: float = 0.0,
+                 tracer=None):
         if not buckets:
             raise ValueError("need at least one bucket edge")
         if linger_ms < 0:
@@ -141,6 +144,7 @@ class TokenBudgetScheduler:
         self.max_batch = max_batch
         self.admission = admission
         self.placement = placement     # PlacementPolicy (or None = single)
+        self.chunk = chunk             # ChunkPolicy (or None = unchunked)
         # fill-or-timeout: an underfull-because-queue-drained batch is held
         # up to linger_ms past its most urgent request's arrival, hoping
         # same-bucket arrivals fill its would-be dummy rows (0 = launch
@@ -297,6 +301,8 @@ class TokenBudgetScheduler:
                         if stop == "admission" else ())
             label = (self.placement.label_for(bucket)
                      if self.placement is not None else "single")
+            chunk = (self.chunk.chunk_for(bucket) or 0
+                     if self.chunk is not None else 0)
             return ScheduledBatch(bucket, tuple(picked), est, deferred,
-                                  placement=label)
+                                  placement=label, chunk_size=chunk)
         return None

@@ -138,7 +138,7 @@ def encode_result(r: FoldResult, *, include_distogram: bool = False) -> dict:
         "compile_ms": r.compile_ms, "run_ms": r.run_ms,
         "launched_batch": r.launched_batch, "occupancy": r.occupancy,
         "tm_vs_fp": r.tm_vs_fp, "kernel_backend": r.kernel_backend,
-        "placement": r.placement,
+        "placement": r.placement, "chunk_size": r.chunk_size,
         "coords": None if r.coords is None else encode_array(r.coords),
         "distogram": None,
     }

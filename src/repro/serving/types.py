@@ -202,6 +202,9 @@ class FoldResult:
                                        # (ref | pallas | pallas-interpret | auto:*)
     placement: str = "single"          # device placement its executable ran
                                        # under ("single" | "mesh:DxM")
+    chunk_size: int = 0                # row-chunk the trunk executed with
+                                       # (0 = unchunked; the long-fold
+                                       # planner's per-bucket plan)
 
     @property
     def ok(self) -> bool:

@@ -1,0 +1,315 @@
+"""Long-fold subsystem tests: chunked-trunk numerical parity, the memory
+planner's admission flip, and the serving-path chunk_size plumbing.
+
+Parity contract (see repro.models.ppm.chunking): FP schemes are chunk-exact
+up to reduction reassociation — allclose at 1e-4, and bitwise when the
+effective chunk degenerates to the full row axis.  AAQ quantizes token-wise
+so each chunk's act() is exact, but upstream reassociation can flip
+near-boundary quantization bins; parity is gated on TM-score >= 0.995, the
+same fidelity bar the serving engine enforces between AAQ and FP.
+
+The N=1024 cases (and nothing else here) are gated behind REPRO_LONGFOLD=1
+— the CI ``long-fold`` job runs them; the tier-1 grid stays under the
+per-test timeout.
+"""
+import io
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduce_ppm_config
+from repro.core import make_scheme
+from repro.models.ppm import init_ppm, ppm_forward, tm_score
+from repro.models.ppm.chunking import effective_chunk_size
+from repro.models.ppm.trunk import PPMConfig
+from repro.serving import (ADMIT, REJECT, AdmissionController, ChunkPolicy,
+                           EngineCore, FoldEngine, chunk_candidates,
+                           parse_chunk_spec)
+from repro.serving.longfold import AUTO, FIXED, MIN_CHUNK, OFF
+
+# one block, narrow channels: parity runs whole forwards, so the config is
+# as small as still exercises every chunked op (tri-mul both directions,
+# tri-attn both orientations, OPM, transitions, seq<-pair bias)
+TINY = PPMConfig(blocks=1, hm=32, hz=16, seq_heads=2, pair_heads=2,
+                 tri_hidden=16, vocab=23, recycles=1, ipa_iters=1,
+                 dtype="float32")
+PARAMS = init_ppm(jax.random.PRNGKey(0), TINY)
+
+LONGFOLD = os.environ.get("REPRO_LONGFOLD") == "1"
+
+
+def _case(b: int, n: int):
+    """Deterministic (aatype, ragged mask, lens) for a parity case."""
+    rng = np.random.default_rng(1000 * b + n)
+    aat = rng.integers(0, 20, (b, n)).astype(np.int32)
+    lens = [n - 5 * i for i in range(b)]
+    mask = np.zeros((b, n), bool)
+    for i, ln in enumerate(lens):
+        mask[i, :ln] = True
+    return jnp.asarray(aat), jnp.asarray(mask), lens
+
+
+_REF_CACHE: dict = {}
+
+
+def _ref(scheme_name: str, b: int, n: int):
+    """Unchunked reference forward, cached across the parametrized grid
+    (the ref is the expensive half of every parity case)."""
+    key = (scheme_name, b, n)
+    if key not in _REF_CACHE:
+        aat, mask, _ = _case(b, n)
+        scheme = make_scheme(scheme_name)
+        out = ppm_forward(PARAMS, aat, TINY, scheme, mask=mask)
+        _REF_CACHE[key] = jax.tree_util.tree_map(np.asarray, out)
+    return _REF_CACHE[key]
+
+
+def _chunked(scheme_name: str, b: int, n: int, chunk: int):
+    aat, mask, _ = _case(b, n)
+    scheme = make_scheme(scheme_name)
+    out = ppm_forward(PARAMS, aat, TINY, scheme, mask=mask, chunk_size=chunk)
+    return jax.tree_util.tree_map(np.asarray, out)
+
+
+# --------------------------------------------------------------------------
+# numerical parity: FP allclose / AAQ TM-gated
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n,chunk", [(2, 64, 16), (1, 300, 32),
+                                       (1, 300, 128)])
+def test_fp_chunked_allclose(b, n, chunk):
+    """FP chunked == unchunked to 1e-4 (reduction reassociation only);
+    n=300 snaps chunk to non-power-of-two divisors (30, 100)."""
+    ref = _ref("baseline_fp16", b, n)
+    out = _chunked("baseline_fp16", b, n, chunk)
+    _, _, lens = _case(b, n)
+    for i, ln in enumerate(lens):
+        np.testing.assert_allclose(out["coords"][i, :ln],
+                                   ref["coords"][i, :ln],
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(out["distogram"][i, :ln, :ln],
+                                   ref["distogram"][i, :ln, :ln],
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_fp_degenerate_chunk_is_bitwise():
+    """chunk >= n runs the chunked code path in ONE slab — same reduction
+    order as unchunked, so the outputs are bitwise identical."""
+    b, n = 2, 64
+    ref = _ref("baseline_fp16", b, n)
+    out = _chunked("baseline_fp16", b, n, 64)
+    np.testing.assert_array_equal(out["coords"], ref["coords"])
+    np.testing.assert_array_equal(out["distogram"], ref["distogram"])
+
+
+@pytest.mark.parametrize("b,n,chunk", [(2, 64, 16), (1, 300, 32),
+                                       (1, 300, 128)])
+def test_aaq_chunked_tm_parity(b, n, chunk):
+    """AAQ chunked vs unchunked: quantization-bin flips on near-boundary
+    values preclude allclose; the gate is the serving fidelity bar."""
+    ref = _ref("lightnobel_aaq", b, n)
+    out = _chunked("lightnobel_aaq", b, n, chunk)
+    _, _, lens = _case(b, n)
+    for i, ln in enumerate(lens):
+        tm = float(tm_score(jnp.asarray(out["coords"][i, :ln]),
+                            jnp.asarray(ref["coords"][i, :ln])))
+        assert tm >= 0.995, (i, ln, tm)
+
+
+@pytest.mark.skipif(not LONGFOLD, reason="REPRO_LONGFOLD=1 only (CI "
+                                         "long-fold job): N=1024 forwards")
+def test_longfold_n1024_parity():
+    """The headline case: a >=1,024-residue fold through the chunked trunk
+    matches the unchunked reference at the serving fidelity bar."""
+    b, n, chunk = 1, 1024, 128
+    ref = _ref("lightnobel_aaq", b, n)
+    out = _chunked("lightnobel_aaq", b, n, chunk)
+    tm = float(tm_score(jnp.asarray(out["coords"][0]),
+                        jnp.asarray(ref["coords"][0])))
+    assert tm >= 0.995, tm
+
+
+# --------------------------------------------------------------------------
+# planner units: spec parsing, candidates, policy modes
+# --------------------------------------------------------------------------
+def test_effective_chunk_size_snaps_to_divisors():
+    assert effective_chunk_size(300, 32) == 30
+    assert effective_chunk_size(300, 128) == 100
+    assert effective_chunk_size(64, 128) == 64
+    assert effective_chunk_size(64, 16) == 16
+    assert effective_chunk_size(2048, 128) == 128
+
+
+def test_parse_chunk_spec():
+    for off in (None, "", "off", "none", "0", 0, "OFF"):
+        assert parse_chunk_spec(off) == (OFF, None)
+    assert parse_chunk_spec("auto") == (AUTO, None)
+    assert parse_chunk_spec("64") == (FIXED, 64)
+    assert parse_chunk_spec(64) == (FIXED, 64)
+    for bad in ("abc", "-3", -3, 1.5, True):
+        with pytest.raises(ValueError):
+            parse_chunk_spec(bad)
+
+
+def test_chunk_candidates_divide_and_descend():
+    cands = chunk_candidates(2048)
+    assert cands == [1024, 512, 256, 128, 64, 32, 16]
+    c300 = chunk_candidates(300)
+    assert all(300 % c == 0 for c in c300)
+    assert c300 == sorted(set(c300), reverse=True)
+    assert all(1 < c < 300 for c in c300)
+
+
+def test_chunk_policy_modes():
+    off = ChunkPolicy("off")
+    assert not off.enabled and off.chunk_for(4096) is None
+    fixed = ChunkPolicy(32)
+    assert fixed.enabled
+    assert fixed.chunk_for(32) is None        # bucket <= chunk: unchunked
+    assert fixed.chunk_for(64) == 32
+    assert fixed.chunk_for(300) == 30         # snapped to a divisor
+    assert fixed.label_for(64) == "chunk:32"
+    assert fixed.label_for(32) == "none"
+    auto = ChunkPolicy("auto")                # no admission wired: no plan
+    assert auto.chunk_for(4096) is None
+
+
+# --------------------------------------------------------------------------
+# the admission flip: N=2,048 rejected unchunked, admitted chunked
+# --------------------------------------------------------------------------
+def test_admission_flip_n2048():
+    """The PR's acceptance regression at reduced-config scale: the same
+    budget that rejects an unchunked N=2,048 fold admits it once the
+    planner wires in — and the decision records the chunk + estimator."""
+    cfg = reduce_ppm_config()
+    scheme = make_scheme("lightnobel_aaq")
+    budget = int(2048e6)
+
+    plain = AdmissionController(cfg, scheme, budget)
+    d0 = plain.admit(2048, 1)
+    assert d0.verdict == REJECT
+    assert d0.chunk_size == 0 and d0.estimator == "q_chunk"
+
+    adm = AdmissionController(cfg, scheme, budget)
+    policy = ChunkPolicy("auto", admission=adm)
+    adm.chunk_for = policy.chunk_for
+    d1 = adm.admit(2048, 1)
+    assert d1.verdict == ADMIT, adm.explain(2048, 1)
+    assert d1.chunk_size >= MIN_CHUNK
+    assert d1.estimator == f"chunked:{d1.chunk_size}"
+    ev = d1.event_data()
+    assert ev["chunk_size"] == d1.chunk_size
+    assert ev["estimator"] == d1.estimator
+    # chunking strictly shrinks the estimate, and the planner picked the
+    # LARGEST chunk that fits (the next rung up must bust the budget)
+    assert adm.estimate_bytes(2048, 1) < plain.estimate_bytes(2048, 1)
+    cands = chunk_candidates(2048)
+    bigger = [c for c in cands if c > d1.chunk_size]
+    if bigger:
+        assert adm.estimate_bytes(2048, 1, chunk=bigger[-1]) > budget
+
+
+def test_auto_policy_leaves_fitting_buckets_unchunked():
+    """Chunking is never free: buckets whose unchunked estimate fits the
+    budget keep the unchunked trunk."""
+    cfg = reduce_ppm_config()
+    adm = AdmissionController(cfg, make_scheme("lightnobel_aaq"),
+                              int(2048e6))
+    policy = ChunkPolicy("auto", admission=adm)
+    adm.chunk_for = policy.chunk_for
+    assert policy.chunk_for(64) is None
+    assert adm.admit(64, 1).estimator == "cubic"
+
+
+def test_score_slab_model_is_shared():
+    """Satellite: ONE attention-slab cost model for both estimators — at
+    ns <= q_chunk with rows = ns the slab formula IS the cubic model, so
+    the unchunked small-bucket price and the shared slab agree exactly."""
+    cfg = reduce_ppm_config()
+    adm = AdmissionController(cfg, make_scheme("baseline_fp16"))
+    ns, b = 128, 2
+    assert adm._score_slab_bytes(ns, b, ns) == b * cfg.pair_heads * ns**3 * 4
+    assert adm._score_bytes(ns, b) == adm._score_slab_bytes(ns, b, ns)
+    assert adm.estimator_for(64, None) == "cubic"
+    assert adm.estimator_for(512, None) == "q_chunk"
+    assert adm.estimator_for(512, 32) == "chunked:32"
+
+
+# --------------------------------------------------------------------------
+# serving path: chunk_size threads batch -> result -> report, no recompiles
+# --------------------------------------------------------------------------
+def test_serving_chunked_end_to_end():
+    """Fixed-chunk serving: results and CSV/JSON reports carry the chunk,
+    the admission telemetry names the estimator, and a repeat of the same
+    trace performs ZERO new compilations (the chunk plan is bucket-only,
+    so it cannot fragment the executable-cache key space)."""
+    engine = FoldEngine(PARAMS, TINY, "lightnobel_aaq", buckets=(32, 64),
+                        max_tokens_per_batch=128, max_batch=2,
+                        chunk_size=16)
+    rng = np.random.default_rng(5)
+    seqs = [rng.integers(0, 20, ln).astype(np.int32) for ln in (20, 40, 28)]
+    results = engine.run(seqs)
+    assert all(r.ok for r in results)
+    assert all(r.chunk_size == 16 for r in results)
+
+    buf = io.StringIO()
+    engine.metrics.write_csv(buf)
+    header, *rows = [l for l in buf.getvalue().strip().splitlines() if l]
+    assert header.endswith(",kernel_backend,placement,chunk_size")
+    assert all(r.endswith(",16") for r in rows), rows
+    buf = io.StringIO()
+    engine.metrics.write_json(buf)
+    assert '"chunk_size": 16' in buf.getvalue()
+
+    n0 = engine.compile_count
+    again = engine.run(seqs, reset_metrics=False)
+    assert all(r.ok and r.chunk_size == 16 for r in again)
+    assert engine.compile_count == n0, "chunked steady state recompiled"
+
+    reg = engine.client.metrics_text()
+    assert any('estimator="chunked:16"' in l
+               for l in reg.splitlines()
+               if l.startswith("fold_admission_decisions_total")), reg
+
+
+def test_serving_admission_flip_end_to_end():
+    """A request over budget unchunked is REJECTED by one engine and
+    correctly folded by an identically-budgeted engine with the planner
+    on — the whole acceptance story at tiny scale."""
+    probe = EngineCore(PARAMS, TINY, "lightnobel_aaq", buckets=(64,))
+    est_off = probe.admission.estimate_bytes(64, 1, chunk=None)
+    est_ch = probe.admission.estimate_bytes(64, 1, chunk=16)
+    assert est_ch < est_off
+    budget_mb = (est_off + est_ch) / 2 / 1e6   # between the two estimates
+
+    rng = np.random.default_rng(9)
+    seq = rng.integers(0, 20, 60).astype(np.int32)
+    plain = FoldEngine(PARAMS, TINY, "lightnobel_aaq", buckets=(64,),
+                       mem_budget_mb=budget_mb)
+    [r0] = plain.run([seq])
+    assert r0.status == "rejected", r0
+
+    chunked = FoldEngine(PARAMS, TINY, "lightnobel_aaq", buckets=(64,),
+                         mem_budget_mb=budget_mb, chunk_size="auto")
+    [r1] = chunked.run([seq])
+    assert r1.ok, r1
+    assert r1.chunk_size >= MIN_CHUNK
+    assert r1.coords.shape == (60, 3)
+
+
+def test_warmup_ladder_covers_solo_requests():
+    """Satellite: warmup() precompiles the (bucket, launch_batch) ladder —
+    a lone request after warmup hits the size-1 executable instead of
+    eating a cold compile (the old cap-only warmup's gap)."""
+    engine = FoldEngine(PARAMS, TINY, "lightnobel_aaq", buckets=(32,),
+                        max_tokens_per_batch=64, max_batch=2,
+                        chunk_size=16)
+    engine.warmup()
+    n0 = engine.compile_count
+    assert n0 >= 2                      # size 1 AND the cap, per bucket
+    rng = np.random.default_rng(11)
+    [r] = engine.run([rng.integers(0, 20, 20).astype(np.int32)])
+    assert r.ok and r.launched_batch == 1 and r.chunk_size == 16
+    assert engine.compile_count == n0, "solo request missed the ladder"

@@ -154,7 +154,7 @@ def test_placement_in_csv_and_json_reports():
     r = FoldResult(request_id=0, length=50, bucket=64, batch_size=1,
                    coords=np.zeros((50, 3), np.float32),
                    kernel_backend="auto:ref", placement="mesh:2x4")
-    assert csv_row(r).endswith(",auto:ref,mesh:2x4")
+    assert csv_row(r).endswith(",auto:ref,mesh:2x4,0")
     m = EngineMetrics()
     m.record(r)
     buf = io.StringIO()
@@ -163,8 +163,8 @@ def test_placement_in_csv_and_json_reports():
     buf = io.StringIO()
     m.write_csv(buf)
     header, row = buf.getvalue().strip().splitlines()
-    assert header.endswith(",kernel_backend,placement")
-    assert row.split(",")[-1] == "mesh:2x4"
+    assert header.endswith(",kernel_backend,placement,chunk_size")
+    assert row.split(",")[-2] == "mesh:2x4"
 
 
 # --------------------------------------------------------------------------
@@ -244,7 +244,7 @@ def test_sharded_serving_parity_admission_and_steady_state():
     buf = io.StringIO()
     sharded.metrics.write_csv(buf)
     rows = [l for l in buf.getvalue().splitlines()[1:] if l]
-    assert all(r.endswith(",mesh:2x4") for r in rows), rows
+    assert all(r.endswith(",mesh:2x4,0") for r in rows), rows
     print("REPORT_OK")
 
     # -- 1. parity: AAQ fidelity gate vs single-device -------------------

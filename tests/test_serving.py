@@ -296,7 +296,8 @@ def test_results_record_kernel_backend():
                         max_tokens_per_batch=64, max_batch=2)
     [r] = engine.run([_seq(20)])
     assert r.kernel_backend == "ref"
-    assert csv_row(r).endswith(",ref,single")   # backend + placement columns
+    # backend + placement + chunk_size columns
+    assert csv_row(r).endswith(",ref,single,0")
     buf = _io.StringIO()
     engine.metrics.write_json(buf)
     assert '"kernel_backend": "ref"' in buf.getvalue()
