@@ -12,8 +12,15 @@ Two services:
     a background thread (``--driver thread``) or the inline pump.
     ``--no-engine`` keeps the one-request-at-a-time fallback (same bucket
     padding, so both paths produce bitwise-identical real-token coords).
-  * ``--mode lm``   — batched token serving for any zoo arch: prefill once,
-    then steady-state decode with the ring KV cache (AAQ-on-KV optional).
+  * ``--mode lm``   — autoregressive decode through the SAME serving
+    substrate (client/handle/event lifecycle, admission, metrics, HTTP
+    transport) hosted by ``LMDecodeWorkload``: continuous per-token
+    batching over ``--batch`` slots, ring KV cache of ``--window``
+    positions, ``--quant-kv`` stores KV AAQ-quantized and admission
+    prices requests at the scheme's KV bits-per-value
+    (``--mem-budget-mb``); ``--drift-tol`` gates quantized logits
+    against an fp16-KV twin.  ``--listen`` serves it over HTTP
+    (``POST /v1/generate``, SSE ``token`` events).
 
 ``--kernels {pallas,ref,auto}`` selects the kernel backend for BOTH paths
 (engine executables and the --no-engine fallback are lowered through
@@ -32,6 +39,10 @@ interpret mode.  ``--report`` rows record the backend each batch ran under.
     PYTHONPATH=src python -m repro.launch.serve --mode ppm \
         --buckets 1024 --chunk-size auto --mem-budget-mb 512 --no-fidelity
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --n 8 \
+        --quant-kv --mem-budget-mb 4 --drift-tol 0.1
+    PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --listen 127.0.0.1:0 --replicas 2 --quant-kv
 
 ``--listen HOST:PORT`` switches ppm mode into a network server: an HTTP
 front-end (``POST /v1/fold``, status/SSE/cancel, ``/metrics``) over a
@@ -53,15 +64,15 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config, reduce_ppm_config
 from repro.core import make_scheme
-from repro.core.policy import AAQConfig, DISABLED
 from repro.kernels import dispatch
 from repro.data.pipeline import ProteinSampler
 from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
-from repro.serving import (CSV_HEADER, FleetRouter, FoldClient,
-                           FoldHTTPServer, MetricsServer, csv_row,
-                           jax_profile, make_serving_mesh, pad_to_bucket,
-                           parse_buckets, parse_chunk_spec)
+from repro.serving import (CSV_HEADER, LM_CSV_HEADER, FleetRouter,
+                           FoldClient, FoldHTTPServer, LMClient,
+                           MetricsServer, csv_row, jax_profile, lm_csv_row,
+                           make_serving_mesh, pad_to_bucket, parse_buckets,
+                           parse_chunk_spec)
 from repro.serving.observability.httpd import parse_hostport
 
 
@@ -147,7 +158,8 @@ def serve_http(args, cfg, params, buckets) -> int:
             client.warmup()
         return client
 
-    router = FleetRouter(factory, args.replicas)
+    router = FleetRouter(factory, args.replicas,
+                         max_restarts=args.max_restarts)
     server = FoldHTTPServer(router, port=port, host=host).start()
     # the CI job and any launcher scrape THIS line for the bound address
     # (--listen HOST:0 binds an ephemeral port)
@@ -293,31 +305,164 @@ def serve_ppm(args):
     return 0
 
 
+def _lm_prompts(args, cfg) -> list[np.ndarray]:
+    """Deterministic synthetic prompt trace (seeded like _sample_trace)."""
+    rng = np.random.default_rng(11)
+    out = []
+    for _ in range(args.n):
+        plen = int(rng.integers(4, max(args.prompt_len, 4) + 1))
+        out.append(rng.integers(0, cfg.vocab, size=plen).astype(np.int32))
+    return out
+
+
+def serve_lm_http(args, cfg, params) -> int:
+    """``--mode lm --listen``: the SAME HTTP front-end + fleet router as
+    the fold path, but each replica is an ``LMClient`` — the substrate
+    refactor's point.  ``POST /v1/generate`` submits, tokens stream as SSE
+    ``token`` events, ``/metrics`` carries ``workload="lm"`` series."""
+    import signal
+    import threading
+
+    try:
+        host, port = parse_hostport(args.listen)
+    except ValueError as e:
+        print(f"error: {e}")
+        return 2
+    scheme = "lightnobel_aaq" if args.quant_kv else "baseline_fp16"
+
+    def factory(i: int) -> LMClient:
+        client = LMClient(params, cfg, scheme, window=args.window,
+                          max_slots=args.batch,
+                          mem_budget_mb=args.mem_budget_mb,
+                          kernels=args.kernels,
+                          default_max_new_tokens=args.tokens)
+        client.tracer.set_metadata(
+            replica=i, workload="lm", arch=args.arch, scheme=scheme,
+            window=args.window, max_slots=args.batch,
+            kernels=dispatch.describe(args.kernels))
+        if args.warmup:
+            client.warmup()
+        return client
+
+    router = FleetRouter(factory, args.replicas,
+                         max_restarts=args.max_restarts)
+    server = FoldHTTPServer(router, port=port, host=host).start()
+    # the CI job and any launcher scrape THIS line for the bound address
+    print(f"# listening {server.url} workload=lm replicas={args.replicas} "
+          f"arch={args.arch} scheme={scheme} window={args.window} "
+          f"slots={args.batch} kernels={dispatch.describe(args.kernels)}",
+          flush=True)
+
+    done = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: done.set())
+    try:
+        done.wait(args.serve_for_s if args.serve_for_s > 0 else None)
+    except KeyboardInterrupt:
+        pass
+    print("# shutting down", flush=True)
+    server.stop()
+    router.stop(drain=True)
+    for r in router.replicas:
+        s = r.client.metrics.summary()
+        print(f"# replica={r.index} served={s['served']}/{s['requests']} "
+              f"rejected={s['rejected']} expired={s['expired']} "
+              f"cancelled={s['cancelled']} tokens={s['tokens']} "
+              f"restarts={r.restarts}")
+    if args.trace_out:
+        stem = args.trace_out[:-5] if args.trace_out.endswith(".json") \
+            else args.trace_out
+        for path in router.save_traces(stem):
+            print(f"# trace -> {path}")
+    print("# fleet shutdown complete", flush=True)
+    return 0
+
+
 def serve_lm(args):
+    """LM decode through the serving substrate: the same client/engine/
+    admission/event lifecycle as folding, hosted by ``LMDecodeWorkload``
+    — continuous per-token batching over ``--batch`` slots with the KV
+    cache AAQ-quantized when ``--quant-kv`` is set (admission then prices
+    requests at the scheme's KV bits-per-value)."""
     cfg = reduce_config(get_config(args.arch)).replace(dtype="float32")
+    if cfg.kind != "dense":
+        print(f"error: --mode lm serves dense decoder archs through the "
+              f"substrate; {args.arch!r} is kind={cfg.kind!r}")
+        return 2
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    aaq = AAQConfig(enabled=True) if args.quant_kv else DISABLED
-    B = args.batch
-    key = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(key, (B, 16), 0, cfg.vocab)
-    cache = lm.make_cache(cfg, B, args.max_len)
-    decode = jax.jit(lambda p, b, c: lm.decode_fn(p, b, c, cfg, aaq=aaq))
-    # prefill by teacher-forcing the prompt through decode (shared path)
-    tok = prompt[:, :1]
+    if args.listen is not None:
+        return serve_lm_http(args, cfg, params)
+
+    scheme = "lightnobel_aaq" if args.quant_kv else "baseline_fp16"
+    client = LMClient(params, cfg, scheme, window=args.window,
+                      max_slots=args.batch,
+                      mem_budget_mb=args.mem_budget_mb,
+                      kernels=args.kernels,
+                      default_max_new_tokens=args.tokens)
+    client.tracer.set_metadata(workload="lm", arch=args.arch, scheme=scheme,
+                               window=args.window, max_slots=args.batch,
+                               kernels=dispatch.describe(args.kernels))
+    if args.warmup:
+        client.warmup()
+    prompts = _lm_prompts(args, cfg)
+    tiers = priority_tiers(len(prompts), args.priority_split)
     t0 = time.perf_counter()
-    for t in range(prompt.shape[1]):
-        logits, cache = decode(params, {"tokens": prompt[:, t:t + 1]}, cache)
-    steps = args.tokens
-    toks = []
-    for _ in range(steps):
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        logits, cache = decode(params, {"tokens": tok}, cache)
-        toks.append(tok)
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
-    total = B * (prompt.shape[1] + steps)
-    print(f"arch={args.arch} batch={B} tokens={total} "
-          f"tok/s={total / dt:.1f} quant_kv={args.quant_kv}")
+    if args.driver == "thread":
+        client.start()
+        handles = [client.submit(p, priority=pr, deadline_s=args.deadline_s)
+                   for p, pr in zip(prompts, tiers)]
+        for h in handles:
+            if not h.done:
+                h.result(timeout=600.0)
+        client.stop()
+    else:
+        for p, pr in zip(prompts, tiers):
+            client.submit(p, priority=pr, deadline_s=args.deadline_s)
+        client.drive()
+    client.metrics.wall_s = time.perf_counter() - t0
+    results = sorted(client.metrics.results, key=lambda r: r.request_id)
+    print(LM_CSV_HEADER)
+    for r in results:
+        print(lm_csv_row(r))
+    s = client.metrics.summary()
+    adm = client.core.admission
+    print(f"# workload=lm arch={args.arch} scheme={scheme} "
+          f"served={s['served']}/{s['requests']} rejected={s['rejected']} "
+          f"expired={s['expired']} tokens={s['tokens']} "
+          f"tok/s={s['tokens_per_s']:.1f} compiles={s['compiles']} "
+          f"kv_bits_per_value={adm.bits_per_value:.1f} "
+          f"kv_bytes_per_req={adm.bytes_per_request} "
+          f"kernels={dispatch.describe(args.kernels)}"
+          + (f" budget_mb={args.mem_budget_mb:.1f}"
+             if args.mem_budget_mb else ""))
+    print(f"# queue_wait_ms p50={s['queue_wait_ms']['p50']:.1f} "
+          f"p95={s['queue_wait_ms']['p95']:.1f} "
+          f"| run_ms p50={s['run_ms']['p50']:.1f} "
+          f"p95={s['run_ms']['p95']:.1f}")
+    if args.report:
+        client.metrics.save(args.report)
+        print(f"# report -> {args.report}")
+    if args.trace_out:
+        client.save_trace(args.trace_out)
+        print(f"# trace -> {args.trace_out}")
+
+    if args.quant_kv and args.drift_tol is not None:
+        # fp16 twin on the same prompts: the quantized-KV run must stay
+        # within --drift-tol of it on first-generated-token logits
+        twin = LMClient(params, cfg, "baseline_fp16", window=args.window,
+                        max_slots=args.batch, kernels=args.kernels,
+                        default_max_new_tokens=args.tokens)
+        ref = {r.request_id: r for r in twin.run(prompts)}
+        drift = max((float(np.max(np.abs(r.logits_first
+                                         - ref[i].logits_first)))
+                     for i, r in enumerate(results)
+                     if r.ok and ref[i].ok and r.logits_first is not None),
+                    default=0.0)
+        ok = drift <= args.drift_tol
+        print(f"# kv_drift max|logits_first - fp16|={drift:.4e} "
+              f"tol={args.drift_tol:.4e} {'OK' if ok else 'FAIL'}")
+        if not ok:
+            return 1
     return 0
 
 
@@ -390,6 +535,12 @@ def main(argv=None):
                     help="engine replicas behind the HTTP front-end; the "
                          "router balances on live queue-depth/in-flight "
                          "telemetry from each replica's registry")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="per-replica restart budget: a replica whose "
+                         "driver dies is rebuilt (fresh client + driver) "
+                         "at most this many times; its queued requests "
+                         "requeue under their original ids (0 = mark dead "
+                         "and drain, never revive)")
     ap.add_argument("--serve-for-s", type=float, default=0.0,
                     help="with --listen: exit after this many seconds "
                          "(0 = run until SIGTERM/SIGINT)")
@@ -414,10 +565,25 @@ def main(argv=None):
                     help="capture a JAX/XLA profiler trace into DIR "
                          "(TensorBoard/Perfetto); engine batch phases "
                          "appear as named host ranges")
+    # -- lm mode (decode through the substrate) --
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--quant-kv", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lm: decode slots (the continuous batch width)")
+    ap.add_argument("--tokens", type=int, default=32,
+                    help="lm: default max_new_tokens per request")
+    ap.add_argument("--quant-kv", action="store_true",
+                    help="lm: AAQ-quantize the KV cache (scheme "
+                         "lightnobel_aaq; admission prices requests at "
+                         "the scheme's KV bits-per-value)")
+    ap.add_argument("--window", type=int, default=128,
+                    help="lm: ring KV window (prompt+generation must fit)")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="lm: max synthetic prompt length (lengths drawn "
+                         "in [4, this])")
+    ap.add_argument("--drift-tol", type=float, default=None,
+                    help="lm + --quant-kv: run an fp16-KV twin on the "
+                         "same prompts and exit 1 if max first-token "
+                         "logit drift exceeds this")
     args = ap.parse_args(argv)
     dispatch.set_backend(args.kernels)   # both modes, both ppm paths
     return serve_ppm(args) if args.mode == "ppm" else serve_lm(args)

@@ -37,6 +37,11 @@ from repro.serving.scheduler import (ScheduledBatch, TokenBudgetScheduler,
                                      static_batch_for)
 from repro.serving.types import (BatchDeviceOutput, FoldRequest, FoldResult,
                                  LazyDistogram, pad_to_bucket)
+from repro.serving.workload import FoldWorkload, Workload
+# the LM workload builds on client/engine/events above
+from repro.serving.lm import (LM_CSV_HEADER, KV_SITE, LMClient,
+                              LMDecodeWorkload, LMEngineCore, LMKVAdmission,
+                              LMMetrics, LMResult, lm_csv_row)
 # transport last: it builds on client/events/observability above
 from repro.serving.transport import (FleetRecord, FleetRouter,
                                      FoldHTTPServer, ProtocolError, Replica)
@@ -67,6 +72,10 @@ __all__ = [
     "Span", "Tracer", "span_tree", "pipeline_overlaps",
     "validate_chrome_trace", "MetricsRegistry", "MetricsServer",
     "PROMETHEUS_CONTENT_TYPE", "jax_profile",
+    # workload substrate + the LM-decode workload
+    "Workload", "FoldWorkload", "LMDecodeWorkload", "LMClient",
+    "LMEngineCore", "LMResult", "LMKVAdmission", "LMMetrics",
+    "LM_CSV_HEADER", "lm_csv_row", "KV_SITE",
     # transport (HTTP front-end + fleet router)
     "FoldHTTPServer", "FleetRouter", "FleetRecord", "Replica",
     "ProtocolError",

@@ -8,6 +8,14 @@ in ``repro.serving.client.FoldClient``, whose pump loop drives this core.
 ``FoldEngine`` (bottom of this module) is the legacy ``submit/step/run``
 surface, kept as a thin compatibility wrapper over a client.
 
+Everything *model-specific* — the traced forward and its input specs, host
+padding, the admission cost model, and the retire-side transfer/result
+construction — lives in a ``repro.serving.workload.Workload`` plugin
+(default: ``FoldWorkload``, the fold path this engine used to inline).
+The core keeps everything substrate: the executable cache and its
+(bucket, launch_batch, scheme, placement, chunk) key, launch-size fitting,
+the in-flight ring, span tracing, and metrics plumbing.
+
 Execution is a two-stage ``dispatch()``/``retire()`` pipeline over a
 bounded in-flight ring (``inflight_depth``, default 2):
 
@@ -90,22 +98,18 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.schemes import FP16Baseline, QuantScheme, make_scheme
 from repro.kernels import dispatch
-from repro.models.ppm import ppm_forward, tm_score
-from repro.models.ppm.trunk import CHUNKED_ATTN_LEN
-from repro.serving.admission import AdmissionController
 from repro.serving.longfold import ChunkPolicy
-from repro.serving.metrics import EngineMetrics, reset_compile_watch
+from repro.serving.metrics import reset_compile_watch
 from repro.serving.observability.profiler import annotate
 from repro.serving.observability.tracing import PROC_ENGINE, Tracer
 from repro.serving.placement import (PlacementPolicy, lower_sharded,
                                      place_inputs)
 from repro.serving.scheduler import ScheduledBatch, static_batch_for
-from repro.serving.types import (BatchDeviceOutput, FoldResult,
-                                 LazyDistogram, pad_to_bucket)
+from repro.serving.types import FoldResult
+from repro.serving.workload import FoldWorkload, Workload
 
 
 class BatchExecutionError(RuntimeError):
@@ -153,7 +157,8 @@ class EngineCore:
                  chunk_size: int | str | None = None,
                  inflight_depth: int = 2,
                  clock: Callable[[], float] = time.monotonic,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None,
+                 workload: Workload | None = None):
         from repro.serving.scheduler import pow2_buckets
         if inflight_depth < 1:
             raise ValueError(f"inflight_depth must be >= 1, "
@@ -178,12 +183,12 @@ class EngineCore:
         self.placement = PlacementPolicy(mesh=mesh,
                                          shard_threshold=shard_threshold)
         budget = None if mem_budget_mb is None else int(mem_budget_mb * 1e6)
-        # pricing switches to the chunked score-slab model at the model's
-        # token-wise MHA threshold; per-device under sharded placements
-        # (mem_budget_mb is a per-device budget)
-        self.admission = AdmissionController(
-            cfg, self.scheme, budget, chunked_len=CHUNKED_ATTN_LEN,
-            shards_for=self.placement.shards_for)
+        # the workload plugin owns everything model-specific: the traced
+        # forward + input specs, host padding, the admission cost model,
+        # and retire-side transfer/result construction
+        self.workload = (FoldWorkload() if workload is None
+                         else workload).bind(self)
+        self.admission = self.workload.make_admission(budget)
         # the long-fold planner: decides per bucket whether the trunk runs
         # row-chunked and at what size, priced against this same admission
         # controller — and wires itself back in so every admission estimate
@@ -192,7 +197,7 @@ class EngineCore:
         self.admission.chunk_for = self.chunk.chunk_for
         self.inflight_depth = inflight_depth
         self._inflight: deque[InFlightBatch] = deque()
-        self.metrics = EngineMetrics()
+        self.metrics = self.workload.make_metrics()
         # span tracer shares the engine clock so batch spans line up with
         # request timestamps; the client re-exports it as ``client.tracer``
         self.tracer = tracer if tracer is not None else Tracer(clock=clock)
@@ -270,16 +275,16 @@ class EngineCore:
         key = (bucket, batch, scheme.name, placement.label, chunk)
         if key in self._executables:
             return self._executables[key], 0.0
-        aat = jax.ShapeDtypeStruct((batch, bucket), jnp.int32)
-        msk = jax.ShapeDtypeStruct((batch, bucket), jnp.bool_)
+        specs = self.workload.input_specs(bucket, batch)
         t0 = time.perf_counter()
         with dispatch.use_backend(self.kernels):
-            fwd = partial(self._forward, scheme, chunk)
+            fwd = partial(self.workload.forward, scheme, chunk)
             if placement.sharded:
                 compiled = lower_sharded(placement, fwd, self.params,
-                                         aat, msk)
+                                         *specs)
             else:
-                compiled = jax.jit(fwd).lower(self.params, aat, msk).compile()
+                compiled = jax.jit(fwd).lower(self.params,
+                                              *specs).compile()
         compile_s = time.perf_counter() - t0
         self._executables[key] = compiled
         self._compile_count += 1
@@ -298,9 +303,9 @@ class EngineCore:
             self._placed_params[placement.label] = placed
         return self._placed_params[placement.label]
 
-    def _forward(self, scheme, chunk, params, aatype, mask):
-        return ppm_forward(params, aatype, self.cfg, scheme, mask=mask,
-                           chunk_size=chunk or None)
+    def _forward(self, scheme, chunk, params, *inputs):
+        """Back-compat alias for the workload's traced forward."""
+        return self.workload.forward(scheme, chunk, params, *inputs)
 
     def warmup(self, ladder: tuple[int, ...] | None = None) -> None:
         """Pre-compile a size LADDER of (bucket, launch_batch) executables
@@ -380,29 +385,27 @@ class EngineCore:
                 batch_start = self.clock()
                 with tr.span("pad", process=PROC_ENGINE, thread=thread,
                              parent=d_span):
-                    aat, mask = pad_to_bucket(
-                        [r.aatype for r in batch.requests], bucket,
-                        launched_b)
+                    inputs = self.workload.pad_inputs(
+                        batch.requests, bucket, launched_b)
                 with tr.span("device_put", process=PROC_ENGINE,
                              thread=thread, parent=d_span):
-                    aat_j, mask_j = jnp.asarray(aat), jnp.asarray(mask)
+                    inputs_j = tuple(jnp.asarray(a) for a in inputs)
                     params = self._params_for(placement)
                     if placement.sharded:
                         # AOT executables demand inputs matching their
                         # lowered shardings
-                        aat_j, mask_j = place_inputs(placement, aat_j,
-                                                     mask_j)
+                        inputs_j = place_inputs(placement, *inputs_j)
                 real_tokens = sum(r.length for r in batch.requests)
                 with tr.span("launch", process=PROC_ENGINE, thread=thread,
                              parent=d_span):
                     t_launch = time.perf_counter()
-                    out = compiled(params, aat_j, mask_j)  # async: no block
+                    out = compiled(params, *inputs_j)  # async: no block
                     # the fidelity re-run launches behind the main forward
                     # on the same device stream — it overlaps host-side work
                     # instead of waiting for the main batch's transfer like
                     # the synchronous path used to
                     fp_out = (None if fp_exec is None
-                              else fp_exec(params, aat_j, mask_j))
+                              else fp_exec(params, *inputs_j))
         except Exception as e:
             tr.end(d_span, status="failed", error=repr(e))
             raise
@@ -454,61 +457,21 @@ class EngineCore:
             with annotate(f"serve.retire/{flight.bucket}"):
                 with tr.span("block", process=PROC_ENGINE,
                              thread=flight.thread, parent=r_span):
-                    jax.block_until_ready(flight.out["coords"])
+                    self.workload.block_on(flight.out)
                 run_s = time.perf_counter() - flight.t_launch
                 with tr.span("transfer", process=PROC_ENGINE,
                              thread=flight.thread, parent=r_span):
-                    # one device->host transfer per batch for coords; numpy
-                    # slicing after that (a device-array slice would eagerly
-                    # compile per distinct length and break the
-                    # zero-recompile steady state).  The distogram — the
-                    # peak host-memory term at long N — stays on device
-                    # behind a shared BatchDeviceOutput until a consumer
-                    # asks a LazyDistogram for it.
-                    coords_host = np.asarray(flight.out["coords"])
-                    disto = None
-                    if self.keep_distogram:
-                        darr = flight.out["distogram"]
-                        pinned = int(getattr(darr, "nbytes", 0))
-                        self.metrics.record_pinned(pinned)
-                        metrics = self.metrics   # bind: run() swaps metrics
-                        disto = BatchDeviceOutput(
-                            darr, nbytes=pinned,
-                            on_release=(lambda m=metrics, n=pinned:
-                                        m.record_pinned(-n)))
-                    fp_coords = (None if flight.fp_out is None
-                                 else np.asarray(flight.fp_out["coords"]))
+                    # the workload owns the device->host move and any
+                    # lazy-transfer policy (fold defers the distogram —
+                    # the peak host-memory term at long N — behind a
+                    # shared BatchDeviceOutput)
+                    payload = self.workload.transfer(flight)
         except Exception as e:
             tr.end(r_span, status="failed", error=repr(e))
             raise BatchExecutionError(batch, e) from e
         tr.end(r_span)
         self.metrics.record_inflight(len(self._inflight))
-        results = []
-        for row, req in enumerate(batch.requests):
-            coords = np.array(coords_host[row, :req.length])
-            tm = None
-            if self.fidelity:
-                tm = 1.0 if fp_coords is None else float(tm_score(
-                    jnp.asarray(coords),
-                    jnp.asarray(fp_coords[row, :req.length])))
-            results.append(FoldResult(
-                request_id=req.request_id, length=req.length,
-                bucket=flight.bucket, batch_size=len(batch.requests),
-                coords=coords,
-                distogram=None if disto is None else LazyDistogram(
-                    disto, row, req.length,
-                    int(flight.out["distogram"].shape[-1])),
-                tm_vs_fp=tm,
-                priority=req.priority,
-                queue_wait_ms=(flight.batch_start - req.arrival_time) * 1e3,
-                compile_ms=flight.compile_s * 1e3,
-                run_ms=run_s * 1e3,
-                launched_batch=flight.launched_b,
-                occupancy=flight.occupancy,
-                est_activation_bytes=flight.est,
-                kernel_backend=flight.backend,
-                placement=flight.placement.label,
-                chunk_size=flight.chunk_size))
+        results = self.workload.build_results(flight, run_s, payload)
         for r in results:
             self.metrics.record(r)
         return results

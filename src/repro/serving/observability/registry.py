@@ -88,16 +88,22 @@ class _Metric:
         return [f"# HELP {self.name} {self.help}",
                 f"# TYPE {self.name} {self.kind}"]
 
+    def _const(self) -> tuple[tuple[str, str], ...]:
+        return self._registry.const_labels
+
     def _sample_lines(self) -> list[str]:
         return [f"{self.name}"
-                f"{_render_labels(self.labelnames, key)} {_fmt(v)}"
+                f"{_render_labels(self.labelnames, key, self._const())}"
+                f" {_fmt(v)}"
                 for key, v in sorted(self._series.items())]
 
     def _as_dict(self) -> dict:
+        const = dict(self._const())
         return {
             "kind": self.kind, "help": self.help,
             "labelnames": list(self.labelnames),
-            "series": [{"labels": dict(zip(self.labelnames, key)),
+            "series": [{"labels": {**dict(zip(self.labelnames, key)),
+                                   **const},
                         "value": v}
                        for key, v in sorted(self._series.items())],
         }
@@ -174,6 +180,7 @@ class Histogram(_Metric):
             return sum(counts)
 
     def _sample_lines(self) -> list[str]:
+        const = self._const()
         lines = []
         for key, (counts, total) in sorted(self._hist.items()):
             cum = 0
@@ -181,26 +188,29 @@ class Histogram(_Metric):
                 cum += n
                 lines.append(
                     f"{self.name}_bucket"
-                    f"{_render_labels(self.labelnames, key, (('le', _fmt(bound)),))}"
+                    f"{_render_labels(self.labelnames, key, const + (('le', _fmt(bound)),))}"
                     f" {cum}")
             cum += counts[-1]
             lines.append(
                 f"{self.name}_bucket"
-                f"{_render_labels(self.labelnames, key, (('le', '+Inf'),))}"
+                f"{_render_labels(self.labelnames, key, const + (('le', '+Inf'),))}"
                 f" {cum}")
             lines.append(f"{self.name}_sum"
-                         f"{_render_labels(self.labelnames, key)}"
+                         f"{_render_labels(self.labelnames, key, const)}"
                          f" {_fmt(total)}")
             lines.append(f"{self.name}_count"
-                         f"{_render_labels(self.labelnames, key)} {cum}")
+                         f"{_render_labels(self.labelnames, key, const)}"
+                         f" {cum}")
         return lines
 
     def _as_dict(self) -> dict:
+        const = dict(self._const())
         return {
             "kind": self.kind, "help": self.help,
             "labelnames": list(self.labelnames),
             "buckets": list(self.buckets),
-            "series": [{"labels": dict(zip(self.labelnames, key)),
+            "series": [{"labels": {**dict(zip(self.labelnames, key)),
+                                   **const},
                         "counts": list(counts), "sum": total,
                         "count": sum(counts)}
                        for key, (counts, total)
@@ -211,11 +221,23 @@ class Histogram(_Metric):
 class MetricsRegistry:
     """Named metrics, get-or-create semantics (re-registering the same
     name with the same kind returns the existing instrument; a kind or
-    label mismatch is a programming error and raises)."""
+    label mismatch is a programming error and raises).
 
-    def __init__(self):
+    ``const_labels`` stamps every rendered sample with fixed labels —
+    the multi-workload serving substrate marks each engine's registry
+    with its workload (``{"workload": "lm"}``).  Opt-in: the default is
+    no const labels and byte-identical exposition to an unlabeled
+    registry, so existing ``fold_*`` scrapes/dashboards are unaffected.
+    """
+
+    def __init__(self, const_labels: dict[str, str] | None = None):
         self._lock = threading.RLock()
         self._metrics: dict[str, _Metric] = {}
+        for ln in (const_labels or {}):
+            if not _LABEL_RE.match(ln) or ln.startswith("__"):
+                raise ValueError(f"invalid const label name {ln!r}")
+        self.const_labels: tuple[tuple[str, str], ...] = tuple(
+            sorted((const_labels or {}).items()))
 
     def _get_or_create(self, cls, name, help, labelnames, **kw):
         with self._lock:

@@ -85,25 +85,32 @@ class FleetRecord:
 
 
 class Replica:
-    """One engine replica: a FoldClient plus fleet-side health state."""
+    """One engine replica: a FoldClient (or LMClient — any client speaking
+    the same handle/event/metrics surface) plus fleet-side health state."""
 
     def __init__(self, index: int, client: FoldClient):
         self.index = index
         self.client = client
         self.healthy = True
         self.started = False
+        self.restarts = 0
 
     @property
     def registry(self) -> MetricsRegistry:
         return self.client.core.metrics.registry
 
     def load(self) -> tuple[float, float]:
-        """(queue_depth, inflight_batches) read from the replica's OWN
-        metrics registry — the same numbers a /metrics scrape shows."""
-        depth = self.registry.get("fold_queue_depth")
-        inflight = self.registry.get("fold_inflight_batches")
+        """(queue_depth, busy) read from the replica's OWN metrics
+        registry — the same numbers a /metrics scrape shows.  Fold engines
+        expose ``fold_queue_depth``/``fold_inflight_batches``; LM engines
+        ``lm_queue_depth``/``lm_active_slots`` — same balancing semantics
+        (waiting work, then work on the device)."""
+        depth = (self.registry.get("fold_queue_depth")
+                 or self.registry.get("lm_queue_depth"))
+        busy = (self.registry.get("fold_inflight_batches")
+                or self.registry.get("lm_active_slots"))
         return (depth.total() if depth is not None else 0.0,
-                inflight.total() if inflight is not None else 0.0)
+                busy.total() if busy is not None else 0.0)
 
     @property
     def driver_alive(self) -> bool:
@@ -125,14 +132,22 @@ class FleetRouter:
 
     def __init__(self, factory: Callable[[int], FoldClient],
                  n_replicas: int = 1, *, autostart: bool = True,
-                 max_records: int = 4096):
+                 max_records: int = 4096, max_restarts: int = 0):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if max_restarts < 0:
+            raise ValueError(f"max_restarts must be >= 0, "
+                             f"got {max_restarts}")
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._next_id = 0
         self._records: OrderedDict[int, FleetRecord] = OrderedDict()
         self.max_records = max_records
+        #: per-replica restart budget: a dead replica is rebuilt via the
+        #: factory at most this many times before it stays unhealthy (0 =
+        #: the pre-restart behavior: mark dead, drain, never revive)
+        self.max_restarts = max_restarts
+        self._factory = factory
         self.replicas = [Replica(i, factory(i)) for i in range(n_replicas)]
         # fleet-level registry: what the front-end's /metrics serves
         self.registry = MetricsRegistry()
@@ -155,6 +170,10 @@ class FleetRouter:
             ("replica",))
         self._m_records = self.registry.gauge(
             "fleet_live_records", "Fleet records currently retained")
+        self._m_restarts = self.registry.counter(
+            "fleet_replica_restarts_total",
+            "Dead replicas rebuilt via the factory, by replica",
+            ("replica",))
         # a wrapped client may already have served direct traffic: start
         # the global id space past every replica's local one so fleet ids
         # never collide with pre-existing request ids
@@ -217,9 +236,12 @@ class FleetRouter:
         return min(candidates, key=lambda r: (*r.load(), r.index))
 
     def submit(self, seq: np.ndarray, *, priority: int = 0,
-               deadline_s: float | None = None) -> FleetRecord:
+               deadline_s: float | None = None,
+               max_new_tokens: int | None = None) -> FleetRecord:
         """Route + submit; returns the fleet record (its ``handle`` may
-        already be terminal — REJECTED — exactly like ``FoldClient``)."""
+        already be terminal — REJECTED — exactly like ``FoldClient``).
+        ``max_new_tokens`` is the LM-workload generation budget (None for
+        fold requests / the LM replica's default)."""
         self.check_health()
         with self._lock:
             replica = self.pick_replica()
@@ -232,7 +254,8 @@ class FleetRouter:
             self._evict_terminal_locked()
             self._m_records.set(len(self._records))
         req = FoldRequest(gid, np.asarray(seq, np.int32),
-                          priority=priority, deadline_s=deadline_s)
+                          priority=priority, deadline_s=deadline_s,
+                          max_new_tokens=max_new_tokens)
         rec.handle = replica.client.submit(req)
         self._m_routed.inc(replica=replica.index)
         return rec
@@ -266,7 +289,10 @@ class FleetRouter:
         the router believes it started it) — or one force-failed via
         ``mark_failed()`` — stops receiving traffic; its still-QUEUED
         requests are cancelled there and resubmitted, same global id, on a
-        healthy replica.  Returns the global ids requeued."""
+        healthy replica.  When ``max_restarts > 0`` the dead replica is
+        then rebuilt via the factory (fresh client + driver) and rejoins
+        the candidate set — its drained requests may land right back on
+        it.  Returns the global ids requeued."""
         requeued: list[int] = []
         with self._lock:
             for r in self.replicas:
@@ -277,10 +303,13 @@ class FleetRouter:
                 self._m_healthy.set(1 if r.healthy else 0, replica=r.index)
             if not unhealthy:
                 return requeued
+            # snapshot the victims off the dead client BEFORE the restart
+            # swaps it out — their handles still point at the old engine
             victims = [rec for rec in self._records.values()
                        if rec.replica_index in unhealthy
                        and rec.handle is not None
                        and rec.handle.status == QUEUED]
+            self._restart_dead_locked()
         for rec in victims:
             # cancel on the dead replica (scheduler state is still sound —
             # only its pump thread died); if the race is lost the request
@@ -301,11 +330,35 @@ class FleetRouter:
             req = rec.handle._request
             rec.handle = target.client.submit(FoldRequest(
                 rec.request_id, req.aatype, priority=req.priority,
-                deadline_s=req.deadline_s))
+                deadline_s=req.deadline_s,
+                max_new_tokens=req.max_new_tokens))
             self._m_requeued.inc()
             self._m_routed.inc(replica=target.index)
             requeued.append(rec.request_id)
         return requeued
+
+    def _restart_dead_locked(self) -> None:
+        """Rebuild dead replicas that still have restart budget: a fresh
+        client from the factory, re-subscribed to the fleet event fan-in,
+        driver started if the router had started the old one.  The old
+        client object is left to the GC — its queued work was snapshotted
+        by the caller and will be resubmitted through normal routing."""
+        for r in self.replicas:
+            if r.healthy or r.restarts >= self.max_restarts:
+                continue
+            client = self._factory(r.index)
+            if client is r.client:
+                # a wrap()-style factory hands back the same dead client:
+                # nothing was rebuilt, so the replica stays unhealthy
+                continue
+            r.client = client
+            self._subscribe(r)
+            r.restarts += 1
+            r.healthy = True
+            self._m_restarts.inc(replica=r.index)
+            self._m_healthy.set(1, replica=r.index)
+            if r.started:
+                r.client.start()
 
     # -- observability ------------------------------------------------------
     def _sync_replica_gauges(self) -> None:
@@ -338,7 +391,7 @@ class FleetRouter:
             "ok": any(r.healthy for r in self.replicas),
             "replicas": [
                 {"index": r.index, "healthy": r.healthy,
-                 "driving": r.driver_alive,
+                 "driving": r.driver_alive, "restarts": r.restarts,
                  "queue_depth": r.load()[0], "inflight": r.load()[1]}
                 for r in self.replicas
             ],
@@ -351,6 +404,8 @@ class FleetRouter:
         return {
             "replicas": len(self.replicas),
             "healthy": sum(1 for r in self.replicas if r.healthy),
+            "workloads": [r.client.core.workload.name
+                          for r in self.replicas],
             "placement": [r.client.core.placement.describe()
                           for r in self.replicas],
         }

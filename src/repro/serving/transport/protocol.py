@@ -100,6 +100,19 @@ def parse_sequence(obj: Any) -> np.ndarray:
                         f"got {type(obj).__name__}")
 
 
+def _parse_scheduling(doc: dict) -> tuple[int, float | None]:
+    priority = doc.get("priority", 0)
+    if not isinstance(priority, int) or isinstance(priority, bool):
+        raise ProtocolError("priority must be an integer")
+    deadline_s = doc.get("deadline_s")
+    if deadline_s is not None:
+        if not isinstance(deadline_s, (int, float)) \
+                or isinstance(deadline_s, bool) or deadline_s <= 0:
+            raise ProtocolError("deadline_s must be a positive number")
+        deadline_s = float(deadline_s)
+    return priority, deadline_s
+
+
 def parse_submit(body: bytes) -> tuple[np.ndarray, int, float | None]:
     """Parse a ``POST /v1/fold`` body -> (sequence, priority, deadline_s)."""
     try:
@@ -114,16 +127,44 @@ def parse_submit(body: bytes) -> tuple[np.ndarray, int, float | None]:
     if "sequence" not in doc:
         raise ProtocolError("missing required field 'sequence'")
     seq = parse_sequence(doc["sequence"])
-    priority = doc.get("priority", 0)
-    if not isinstance(priority, int) or isinstance(priority, bool):
-        raise ProtocolError("priority must be an integer")
-    deadline_s = doc.get("deadline_s")
-    if deadline_s is not None:
-        if not isinstance(deadline_s, (int, float)) \
-                or isinstance(deadline_s, bool) or deadline_s <= 0:
-            raise ProtocolError("deadline_s must be a positive number")
-        deadline_s = float(deadline_s)
+    priority, deadline_s = _parse_scheduling(doc)
     return seq, priority, deadline_s
+
+
+def parse_generate(body: bytes) -> tuple[np.ndarray, int, float | None,
+                                         int | None]:
+    """Parse a ``POST /v1/generate`` body -> (prompt token ids, priority,
+    deadline_s, max_new_tokens).  The prompt is a list of non-negative
+    token ids — the LM workload's vocabulary, not the AA alphabet."""
+    try:
+        doc = json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ProtocolError(f"body is not valid JSON: {e}") from None
+    if not isinstance(doc, dict):
+        raise ProtocolError("body must be a JSON object")
+    unknown = set(doc) - {"prompt", "max_new_tokens", "priority",
+                          "deadline_s"}
+    if unknown:
+        raise ProtocolError(f"unknown field(s) {sorted(unknown)}")
+    if "prompt" not in doc:
+        raise ProtocolError("missing required field 'prompt'")
+    raw = doc["prompt"]
+    if not isinstance(raw, (list, tuple)) or not raw:
+        raise ProtocolError("prompt must be a non-empty list of token ids")
+    try:
+        arr = np.asarray(raw)
+    except (TypeError, ValueError):
+        raise ProtocolError("prompt must contain integers") from None
+    if arr.dtype.kind not in "iu" or arr.ndim != 1:
+        raise ProtocolError("prompt must be a flat list of integers")
+    if arr.min() < 0:
+        raise ProtocolError("token ids must be non-negative")
+    mnt = doc.get("max_new_tokens")
+    if mnt is not None:
+        if not isinstance(mnt, int) or isinstance(mnt, bool) or mnt < 1:
+            raise ProtocolError("max_new_tokens must be an integer >= 1")
+    priority, deadline_s = _parse_scheduling(doc)
+    return arr.astype(np.int32), priority, deadline_s, mnt
 
 
 # -- results ----------------------------------------------------------------
@@ -161,11 +202,47 @@ def decode_result(d: dict) -> FoldResult:
         raise ProtocolError(f"malformed result payload: {e}") from None
 
 
+def encode_lm_result(r, *, include_logits: bool = False) -> dict:
+    """LMResult -> wire dict.  Generated tokens cross as a plain id list;
+    ``logits_first`` (the drift-probe vector) is opt-in, like the fold
+    distogram — a status poll never ships a (V,) float array."""
+    out = {
+        "request_id": r.request_id, "prompt_len": r.prompt_len,
+        "status": r.status, "reason": r.reason,
+        "tokens": None if r.tokens is None else [int(t) for t in r.tokens],
+        "max_new_tokens": r.max_new_tokens, "priority": r.priority,
+        "queue_wait_ms": r.queue_wait_ms, "compile_ms": r.compile_ms,
+        "run_ms": r.run_ms, "steps": r.steps, "slot": r.slot,
+        "kv_bytes": r.kv_bytes, "kernel_backend": r.kernel_backend,
+        "scheme": r.scheme, "logits_first": None,
+    }
+    if include_logits and r.logits_first is not None:
+        out["logits_first"] = encode_array(r.logits_first)
+    return out
+
+
+def decode_lm_result(d: dict):
+    """Wire dict -> LMResult (token list restored as int32)."""
+    from repro.serving.lm import LMResult
+    known = {f.name for f in dataclasses.fields(LMResult)}
+    kw = {k: v for k, v in d.items() if k in known}
+    if kw.get("tokens") is not None:
+        kw["tokens"] = np.asarray(kw["tokens"], np.int32)
+    if kw.get("logits_first") is not None:
+        kw["logits_first"] = decode_array(kw["logits_first"])
+    try:
+        return LMResult(**kw)
+    except TypeError as e:
+        raise ProtocolError(f"malformed result payload: {e}") from None
+
+
 def encode_status(record, *, include_distogram: bool = False) -> dict:
-    """A fleet record's status payload (``GET /v1/fold/<id>``).
+    """A fleet record's status payload (``GET /v1/fold/<id>`` or
+    ``GET /v1/generate/<id>``).
 
     ``record`` is a ``fleet.FleetRecord``; the result rides along only
-    once the handle is terminal."""
+    once the handle is terminal.  The result encoding dispatches on the
+    result type, so fold and LM records share one status schema."""
     handle = record.handle
     state = handle.status
     out = {
@@ -182,8 +259,14 @@ def encode_status(record, *, include_distogram: bool = False) -> dict:
         "result": None,
     }
     if handle.done:
-        out["result"] = encode_result(handle._result,
-                                      include_distogram=include_distogram)
+        r = handle._result
+        if isinstance(r, FoldResult):
+            out["result"] = encode_result(
+                r, include_distogram=include_distogram)
+        else:
+            out["workload"] = "lm"
+            out["result"] = encode_lm_result(
+                r, include_logits=include_distogram)
     return out
 
 

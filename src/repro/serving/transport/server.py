@@ -17,6 +17,17 @@ can drive the fold engine:
                                   progress events; replays history, then
                                   follows live until the terminal event
     DELETE /v1/fold/<id>          cancel -> {"cancelled", "state"}
+    POST   /v1/generate           LM-decode submit {"prompt",
+                                  "max_new_tokens", "priority",
+                                  "deadline_s"} (requires an LM-workload
+                                  fleet); same 202 + events_url contract
+    GET    /v1/generate/<id>[/events] and DELETE /v1/generate/<id> are
+                                  the same record machinery as /v1/fold —
+                                  ids share one fleet namespace, so either
+                                  prefix addresses either workload; SSE
+                                  additionally carries per-token ``token``
+                                  events; ``?logits=1`` returns the
+                                  first-token logits on terminal status
     GET    /healthz               fleet liveness + per-replica health
     GET    /v1/fleet              fleet topology
     GET    /metrics               fleet registry, Prometheus text
@@ -39,7 +50,7 @@ from repro.serving.observability.registry import PROMETHEUS_CONTENT_TYPE
 from repro.serving.transport import protocol
 from repro.serving.transport.fleet import FleetRouter
 
-_FOLD_RE = re.compile(r"^/v1/fold/(\d+)(/events)?$")
+_FOLD_RE = re.compile(r"^/v1/(?:fold|generate)/(\d+)(/events)?$")
 _REPLICA_RE = re.compile(r"^/metrics/replica/(\d+)$")
 
 #: SSE follow-mode wakeup period: bounds how long a stream waiter can
@@ -89,7 +100,7 @@ class FoldHTTPServer(BackgroundHTTPServer):
                 rec = outer.router.get(request_id)
                 if rec is None:
                     raise protocol.ProtocolError(
-                        f"unknown fold id {request_id}", http_status=404)
+                        f"unknown request id {request_id}", http_status=404)
                 return rec
 
             def _query(self) -> dict[str, str]:
@@ -104,20 +115,26 @@ class FoldHTTPServer(BackgroundHTTPServer):
             # -- verbs --
             def _post(self) -> None:
                 path = self.path.split("?", 1)[0]
-                if path != "/v1/fold":
+                if path not in ("/v1/fold", "/v1/generate"):
                     self._send_json(404, {"error": "not found"})
                     return
                 length = int(self.headers.get("Content-Length") or 0)
-                seq, priority, deadline_s = protocol.parse_submit(
-                    self.rfile.read(length))
+                raw = self.rfile.read(length)
+                if path == "/v1/fold":
+                    seq, priority, deadline_s = protocol.parse_submit(raw)
+                    mnt = None
+                else:
+                    seq, priority, deadline_s, mnt = \
+                        protocol.parse_generate(raw)
                 try:
                     rec = outer.router.submit(seq, priority=priority,
-                                              deadline_s=deadline_s)
+                                              deadline_s=deadline_s,
+                                              max_new_tokens=mnt)
                 except RuntimeError as e:    # no healthy replicas
                     self._send_json(503, {"error": str(e)})
                     return
                 body = protocol.encode_status(rec)
-                body["events_url"] = f"/v1/fold/{rec.request_id}/events"
+                body["events_url"] = f"{path}/{rec.request_id}/events"
                 self._send_json(202, body)
 
             def _get(self) -> None:
@@ -128,7 +145,12 @@ class FoldHTTPServer(BackgroundHTTPServer):
                     if m.group(2):                       # /events -> SSE
                         self._stream_events(rec)
                     else:
-                        want = self._query().get("distogram") in ("1", "true")
+                        q = self._query()
+                        # one wire knob for either workload's heavy
+                        # optional payload: fold's distogram / LM's
+                        # first-token logits
+                        want = (q.get("distogram") in ("1", "true")
+                                or q.get("logits") in ("1", "true"))
                         self._send_json(200, protocol.encode_status(
                             rec, include_distogram=want))
                     return

@@ -151,6 +151,9 @@ class FoldRequest:
     deadline_s: float | None = None    # relative budget from submit
     deadline_at: float | None = None   # absolute, client clock; set on submit
     cancelled: bool = False            # set by FoldHandle.cancel()
+    max_new_tokens: int | None = None  # LM decode only: generation budget
+                                       # (``aatype`` doubles as the prompt
+                                       # token ids); None for fold requests
 
     def __post_init__(self):
         self.aatype = np.asarray(self.aatype, np.int32)
@@ -158,6 +161,9 @@ class FoldRequest:
             raise ValueError(f"aatype must be 1-D, got {self.aatype.shape}")
         if self.deadline_s is not None and self.deadline_s <= 0:
             raise ValueError(f"deadline_s must be positive, got {self.deadline_s}")
+        if self.max_new_tokens is not None and self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {self.max_new_tokens}")
 
     @property
     def length(self) -> int:

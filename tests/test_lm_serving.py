@@ -1,0 +1,262 @@
+"""LM-decode workload tests: continuous per-token batching (join/leave
+mid-decode must not perturb any request's stream), priority ordering,
+KV-bytes admission at the scheme's bits-per-value, the token-event
+lifecycle, replica auto-restart in the fleet router, and LM decode over
+the HTTP transport (POST /v1/generate + SSE + workload-labeled metrics).
+"""
+import json
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.serving import (ADMIT, DEFER, REJECT, FleetRouter, FoldHTTPServer,
+                           LMClient, check_request_order)
+from repro.serving import events as ev
+
+CFG = ArchConfig(name="tiny-lm", kind="dense", layers=2, d_model=32,
+                 n_heads=2, n_kv_heads=2, d_ff=64, vocab=61,
+                 dtype="float32")
+PARAMS = lm.init_params(jax.random.PRNGKey(0), CFG)
+RNG = np.random.default_rng(7)
+
+#: per-request KV footprint at window=32 under each scheme:
+#: layers*2*window*heads*hd*bits/8 = 2*2*32*2*16*{16,6}/8
+FP16_KV_BYTES = 8192
+AAQ_KV_BYTES = 3072
+
+
+def _prompt(n: int) -> np.ndarray:
+    return RNG.integers(0, CFG.vocab, n).astype(np.int32)
+
+
+def _client(scheme: str = "lightnobel_aaq", **kw) -> LMClient:
+    kw.setdefault("window", 32)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("default_max_new_tokens", 5)
+    return LMClient(PARAMS, CFG, scheme, **kw)
+
+
+# --------------------------------------------------------------------------
+# continuous batching: solo == batched, per token and per logit
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ["baseline_fp16", "lightnobel_aaq"])
+def test_joining_and_leaving_mid_decode_keeps_streams_bitwise(scheme):
+    """Three requests with different generation lengths share two slots:
+    request 2 joins after request 0 retires (mid-decode for request 1),
+    so every slot-composition transition happens — and every request's
+    token stream and first-token logits must equal its solo run."""
+    prompts = [_prompt(4), _prompt(9), _prompt(6)]
+    lengths = [3, 8, 5]
+
+    solo = []
+    for p, n in zip(prompts, lengths):
+        r = _client(scheme).run([p], max_new_tokens=n)[0]
+        assert r.ok
+        solo.append(r)
+
+    client = _client(scheme)
+    for p, n in zip(prompts, lengths):
+        client.submit(p, max_new_tokens=n)
+    batched = client.run([], reset_metrics=False)
+    assert [r.request_id for r in batched] == [0, 1, 2]
+    assert {r.slot for r in batched[:2]} == {0, 1}   # both slots used
+    for s, b in zip(solo, batched):
+        assert b.ok and b.new_tokens == s.new_tokens
+        assert np.array_equal(s.tokens, b.tokens)
+        assert s.logits_first.tobytes() == b.logits_first.tobytes()
+    # one executable shape -> exactly one compile, zero steady-state
+    assert client.metrics.summary()["compiles"] == 1
+
+
+def test_priority_orders_seating_when_slots_are_scarce():
+    client = _client(max_slots=1)
+    events = []
+    client.subscribe(events.append)
+    h_lo = client.submit(_prompt(4), priority=0, max_new_tokens=2)
+    h_hi = client.submit(_prompt(4), priority=5, max_new_tokens=2)
+    client.drive()
+    assert h_lo.result().ok and h_hi.result().ok
+    # the later-submitted high-priority request was seated first
+    seated = [e.request_id for e in events if e.kind == ev.SCHEDULED]
+    assert seated == [h_hi.request_id, h_lo.request_id]
+
+
+# --------------------------------------------------------------------------
+# admission: KV bytes at the scheme's bits-per-value
+# --------------------------------------------------------------------------
+def test_kv_admission_prices_quantized_cache_cheaper():
+    """One budget, two schemes: 5 KB per request fits the AAQ cache
+    (6 bits/value) but not fp16 (16 bits/value) — quantization IS the
+    admission headroom."""
+    budget_mb = 5000 / 1e6                     # engine MB = 1e6 bytes
+    fp16 = _client("baseline_fp16", mem_budget_mb=budget_mb)
+    assert fp16.core.admission.bytes_per_request == FP16_KV_BYTES
+    h = fp16.submit(_prompt(4), max_new_tokens=2)
+    assert h.status == "REJECTED"
+    r = h.result()
+    assert not r.ok and "bits/value" in r.reason
+
+    aaq = _client("lightnobel_aaq", mem_budget_mb=budget_mb)
+    assert aaq.core.admission.bytes_per_request == AAQ_KV_BYTES
+    r = aaq.submit(_prompt(4), max_new_tokens=2).result()
+    assert r.ok and r.kv_bytes == AAQ_KV_BYTES
+
+
+def test_kv_admission_flips_from_reject_to_admit_with_budget():
+    below = _client(mem_budget_mb=(AAQ_KV_BYTES - 1) / 1e6)
+    assert below.submit(_prompt(4)).status == "REJECTED"
+    assert below.core.admission.admit(32, 1).verdict == REJECT
+    at = _client(mem_budget_mb=AAQ_KV_BYTES / 1e6)
+    assert at.core.admission.admit(32, 1).verdict == ADMIT
+    assert at.submit(_prompt(4), max_new_tokens=2).result().ok
+
+
+def test_kv_admission_defers_second_request_until_a_slot_frees():
+    """Budget for exactly one resident cache: the second request DEFERs
+    (with the decision's telemetry on the event), then serves once the
+    first retires — backpressure, not rejection."""
+    client = _client(mem_budget_mb=AAQ_KV_BYTES * 1.5 / 1e6)
+    assert client.core.admission.admit(32, 2).verdict == DEFER
+    events = []
+    client.subscribe(events.append)
+    h1 = client.submit(_prompt(4), max_new_tokens=3)
+    h2 = client.submit(_prompt(4), max_new_tokens=3)
+    client.drive()
+    assert h1.result().ok and h2.result().ok
+    deferred = [e for e in events if e.kind == ev.DEFERRED]
+    assert deferred and deferred[0].request_id == h2.request_id
+    assert deferred[0].data["est_mb"] == 2 * AAQ_KV_BYTES / 1e6
+    assert deferred[0].data["estimator"] == "kv_bytes"
+
+
+# --------------------------------------------------------------------------
+# token events + background driver
+# --------------------------------------------------------------------------
+def test_token_events_stream_in_order_under_the_background_driver():
+    client = _client()
+    per_req: dict[int, list] = {}
+    client.subscribe(
+        lambda e: per_req.setdefault(e.request_id, []).append(e))
+    client.start()
+    try:
+        handles = [client.submit(_prompt(4 + i), max_new_tokens=4)
+                   for i in range(3)]
+        results = {h.request_id: h.result(timeout=600.0) for h in handles}
+    finally:
+        client.stop()
+    for rid, evs in per_req.items():
+        check_request_order(evs)             # TOKEN legality included
+        toks = [e for e in evs if e.kind == ev.TOKEN]
+        assert len(toks) == 4 == results[rid].new_tokens
+        assert [t.data["token"] for t in toks] == \
+            list(results[rid].tokens)
+        assert [t.data["step"] for t in toks] == [0, 1, 2, 3]
+
+
+# --------------------------------------------------------------------------
+# fleet: replica auto-restart (bounded by max_restarts)
+# --------------------------------------------------------------------------
+def test_fleet_restarts_dead_replica_and_requeues_its_queue():
+    built = []
+
+    def factory(i):
+        c = _client()
+        built.append(c)
+        return c
+
+    router = FleetRouter(factory, 2, autostart=False, max_restarts=1)
+    try:
+        recs = [router.submit(_prompt(4 + i), max_new_tokens=3)
+                for i in range(3)]
+        assert all(r.handle.status == "QUEUED" for r in recs)
+        n_before = len(built)
+
+        router.replicas[0].mark_failed()
+        requeued = router.check_health()
+        assert requeued                       # replica 0's queue drained
+        # a FRESH client was built and the replica rejoined the fleet
+        assert len(built) == n_before + 1
+        assert router.replicas[0].client is built[-1]
+        assert router.replicas[0].healthy
+        assert router.replicas[0].restarts == 1
+        assert router.registry.get(
+            "fleet_replica_restarts_total").total() == 1
+
+        router.start()
+        results = [r.handle.result(timeout=600.0) for r in recs]
+        assert all(res.ok for res in results)
+        for rec in recs:                      # ids survive the requeue
+            check_request_order(rec.events)
+            kinds = [e.kind for e in rec.events]
+            assert kinds.count(ev.SUBMITTED) == 1
+            assert kinds[-1] == ev.COMPLETED
+
+        # budget exhausted: a second death stays dead
+        router.replicas[0].mark_failed()
+        router.check_health()
+        assert not router.replicas[0].healthy
+        assert router.replicas[0].restarts == 1
+    finally:
+        router.stop()
+
+
+# --------------------------------------------------------------------------
+# HTTP transport: /v1/generate end to end
+# --------------------------------------------------------------------------
+def test_generate_over_http_with_sse_tokens_and_labeled_metrics():
+    router = FleetRouter(lambda i: _client(), 1, autostart=True)
+    try:
+        with FoldHTTPServer(router) as srv:
+            from repro.serving.transport.server import request_json
+            doc = request_json(
+                f"{srv.url}/v1/generate", method="POST",
+                body={"prompt": [1, 2, 3], "max_new_tokens": 4,
+                      "priority": 1})
+            rid = doc["id"]
+            assert doc["events_url"] == f"/v1/generate/{rid}/events"
+
+            # SSE replays history then follows to the terminal event
+            with urllib.request.urlopen(
+                    f"{srv.url}/v1/generate/{rid}/events",
+                    timeout=60.0) as resp:
+                frames = resp.read().decode("utf-8")
+            events = []
+            for block in frames.strip().split("\n\n"):
+                kind = data = None
+                for line in block.split("\n"):
+                    if line.startswith("event: "):
+                        kind = line[len("event: "):]
+                    elif line.startswith("data: "):
+                        data = json.loads(line[len("data: "):])
+                if kind:
+                    events.append((kind, data))
+            kinds = [k for k, _ in events]
+            assert kinds.count(ev.TOKEN) == 4
+            assert kinds[-1] == ev.COMPLETED
+
+            st = request_json(f"{srv.url}/v1/generate/{rid}?logits=1")
+            assert st["state"] == "DONE" and st["workload"] == "lm"
+            res = st["result"]
+            assert res["scheme"] == "lightnobel_aaq"
+            assert res["kv_bytes"] == AAQ_KV_BYTES
+            assert res["tokens"] == [d["data"]["token"]
+                                     for k, d in events if k == ev.TOKEN]
+            assert res["logits_first"] is not None
+
+            # the replica's scrape carries the workload label
+            with urllib.request.urlopen(
+                    f"{srv.url}/metrics/replica/0", timeout=30.0) as resp:
+                text = resp.read().decode("utf-8")
+            assert 'workload="lm"' in text
+            ok_line = [ln for ln in text.splitlines()
+                       if ln.startswith("lm_requests_total{")
+                       and 'status="ok"' in ln]
+            assert ok_line and 'workload="lm"' in ok_line[0]
+            assert request_json(f"{srv.url}/v1/fleet")["workloads"] == \
+                ["lm"]
+    finally:
+        router.stop()

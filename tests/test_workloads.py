@@ -1,0 +1,198 @@
+"""Workload-substrate tests: the ``Workload`` protocol surface, the
+fold path's indirection through ``FoldWorkload`` (same engine behavior,
+now pluggable), the LM workload's cache layout vs its admission byte
+accounting, and the LM wire schema added to the transport protocol.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduce_ppm_config
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.ppm import init_ppm
+from repro.serving import (EngineCore, FoldClient, FoldResult,
+                           FoldWorkload, LMDecodeWorkload, LMEngineCore,
+                           LMKVAdmission, LMMetrics, LMResult, Workload)
+from repro.serving import events as ev
+from repro.serving.transport import protocol
+
+PPM_CFG = reduce_ppm_config()
+PPM_PARAMS = init_ppm(jax.random.PRNGKey(0), PPM_CFG)
+
+LM_CFG = ArchConfig(name="tiny-lm", kind="dense", layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, d_ff=64, vocab=61,
+                    dtype="float32")
+LM_PARAMS = lm.init_params(jax.random.PRNGKey(0), LM_CFG)
+
+
+# --------------------------------------------------------------------------
+# the protocol surface
+# --------------------------------------------------------------------------
+def test_workload_base_is_abstract_at_the_hook_level():
+    w = Workload()
+    for call in (lambda: w.input_specs(32, 2),
+                 lambda: w.forward(None, 0, {}),
+                 lambda: w.pad_inputs((), 32, 2),
+                 lambda: w.make_admission(None),
+                 lambda: w.block_on({}),
+                 lambda: w.transfer(None),
+                 lambda: w.build_results(None, 0.0, None)):
+        with pytest.raises(NotImplementedError):
+            call()
+    # telemetry default: the unlabeled fold metrics object
+    assert type(w.make_metrics()).__name__ == "EngineMetrics"
+
+
+def test_engine_core_hosts_a_bound_fold_workload_by_default():
+    from repro.serving import AdmissionController
+
+    core = EngineCore(PPM_PARAMS, PPM_CFG, buckets=(32,), fidelity=False)
+    assert isinstance(core.workload, FoldWorkload)
+    assert core.workload.core is core          # bind() ran
+    assert core.workload.name == "fold"
+    assert core.workload.result_type is FoldResult
+    assert core.workload.extra_event_kinds == ()
+    # the admission controller came through the workload hook
+    assert isinstance(core.admission, AdmissionController)
+
+
+def test_fold_workload_specs_match_the_batch_shape():
+    core = EngineCore(PPM_PARAMS, PPM_CFG, buckets=(32,), fidelity=False)
+    aat_spec, mask_spec = core.workload.input_specs(32, 3)
+    assert aat_spec.shape == (3, 32) and mask_spec.shape == (3, 32)
+    assert str(mask_spec.dtype) == "bool"
+
+
+def test_lm_workload_declares_the_token_event():
+    w = LMDecodeWorkload()
+    assert w.name == "lm"
+    assert w.result_type is LMResult
+    assert ev.TOKEN in w.extra_event_kinds
+    assert ev.TOKEN in ev.EVENT_KINDS
+
+
+class _StubLMCore:
+    """Just enough host-engine surface for cache_layout()."""
+    def __init__(self, cfg, scheme, window, max_slots):
+        from repro.core import make_scheme
+        self.cfg, self.scheme = cfg, make_scheme(scheme)
+        self.window, self.max_slots = window, max_slots
+
+
+@pytest.mark.parametrize("scheme,bits", [("baseline_fp16", 16.0),
+                                         ("lightnobel_aaq", 6.0)])
+def test_lm_cache_layout_bytes_match_admission_pricing(scheme, bits):
+    """The admission controller's bytes-per-request must equal what the
+    workload actually allocates per (slot, window) in its cache layout —
+    the cost model prices the real resource.  (Uses a bf16 config so the
+    raw ring's storage dtype matches the fp16 scheme's nominal bits.)"""
+    cfg = LM_CFG.replace(dtype="bfloat16")
+    core = _StubLMCore(cfg, scheme, 32, 2)
+    adm = LMKVAdmission(cfg, core.scheme, 32)
+    assert adm.bits_per_value == bits
+    layout = LMDecodeWorkload().bind(core).cache_layout()
+    per_slot_bytes = 0
+    for shape, dtype in layout.values():
+        # (layers, slots, window, heads, per-head lane): drop the slot axis
+        n = int(np.prod([d for i, d in enumerate(shape) if i != 1]))
+        per_slot_bytes += n * np.dtype(dtype).itemsize
+    assert adm.bytes_per_request == per_slot_bytes
+
+
+def test_lm_engine_metrics_come_through_the_workload_hook():
+    core = LMEngineCore(LM_PARAMS, LM_CFG, "lightnobel_aaq", window=32,
+                        max_slots=2)
+    assert isinstance(core.admission, LMKVAdmission)
+    assert isinstance(core.metrics, LMMetrics)
+    core.metrics.record_queue_depth(0)
+    assert 'workload="lm"' in core.metrics.registry.prometheus_text()
+
+
+def test_fold_client_unchanged_through_the_workload_indirection():
+    """Golden check riding the refactor: a fold served through the
+    Workload-hosted engine returns the same coords, bitwise, as the plain
+    jitted forward (the pre-engine reference path) — the indirection and
+    the extracted FoldWorkload hooks are numerically free."""
+    import jax.numpy as jnp
+    from repro.models.ppm import ppm_forward
+    from repro.core import make_scheme
+    from repro.serving import pad_to_bucket
+
+    rng = np.random.default_rng(3)
+    seq = rng.integers(0, 20, 24).astype(np.int32)
+    client = FoldClient(PPM_PARAMS, PPM_CFG, "lightnobel_aaq",
+                        buckets=(32,), fidelity=False)
+    res = client.submit(seq).result()
+    assert res.ok
+
+    aat, mask = pad_to_bucket([seq], 32)
+    scheme = make_scheme("lightnobel_aaq")
+    fwd = jax.jit(lambda p, a, m: ppm_forward(p, a, PPM_CFG, scheme,
+                                              mask=m))
+    out = fwd(PPM_PARAMS, jnp.asarray(aat), jnp.asarray(mask))
+    ref = np.asarray(out["coords"])[0, :len(seq)]
+    assert res.coords.tobytes() == ref.tobytes()
+
+
+# --------------------------------------------------------------------------
+# LM wire schema (transport protocol additions)
+# --------------------------------------------------------------------------
+def test_parse_generate_accepts_and_validates():
+    prompt, priority, deadline_s, mnt = protocol.parse_generate(
+        b'{"prompt": [1, 2, 3], "max_new_tokens": 4, "priority": 2}')
+    assert prompt.tolist() == [1, 2, 3] and prompt.dtype == np.int32
+    assert (priority, deadline_s, mnt) == (2, None, 4)
+    # max_new_tokens is optional (the engine default applies)
+    assert protocol.parse_generate(b'{"prompt": [0]}')[3] is None
+    for bad in (b'{}', b'{"prompt": []}', b'{"prompt": [1.5]}',
+                b'{"prompt": [-1]}', b'{"prompt": [1], "max_new_tokens": 0}',
+                b'{"prompt": [1], "nope": 1}',
+                b'{"prompt": [1], "priority": true}'):
+        with pytest.raises(protocol.ProtocolError):
+            protocol.parse_generate(bad)
+
+
+def test_lm_result_roundtrip_and_workload_tag():
+    r = LMResult(request_id=7, prompt_len=3, status="ok", tokens=np.array(
+        [4, 5, 6], np.int32), max_new_tokens=3, priority=1,
+        queue_wait_ms=1.5, compile_ms=0.0, run_ms=2.5, steps=5, slot=1,
+        kv_bytes=3072, kernel_backend="auto:ref", scheme="lightnobel_aaq",
+        logits_first=np.linspace(-1, 1, 8, dtype=np.float32))
+    back = protocol.decode_lm_result(
+        protocol.encode_lm_result(r, include_logits=True))
+    assert isinstance(back, LMResult)
+    assert back.tokens.tolist() == [4, 5, 6]
+    assert back.logits_first.tobytes() == r.logits_first.tobytes()
+    assert (back.request_id, back.kv_bytes, back.scheme) == \
+        (7, 3072, "lightnobel_aaq")
+    # logits ride along only on request (they are V floats per result)
+    assert protocol.encode_lm_result(r)["logits_first"] is None
+
+
+class _DoneHandle:
+    status, done, length, priority, deadline_s = "DONE", True, 3, 0, None
+
+    def __init__(self, result):
+        self._result = result
+
+
+class _Rec:
+    """Minimal fleet-record stand-in for encode_status."""
+    def __init__(self, result):
+        self.request_id = 1
+        self.replica_index = 0
+        self.requeues = 0
+        self.events = []
+        self.handle = _DoneHandle(result)
+
+
+def test_encode_status_tags_lm_records_only():
+    lm_res = LMResult(request_id=1, prompt_len=3,
+                      tokens=np.array([1], np.int32), max_new_tokens=1)
+    doc = protocol.encode_status(_Rec(lm_res))
+    assert doc["workload"] == "lm"
+    fold_res = FoldResult(request_id=1, length=3, bucket=32, batch_size=1,
+                          coords=np.zeros((3, 3), np.float32))
+    doc = protocol.encode_status(_Rec(fold_res))
+    assert "workload" not in doc          # fold wire format unchanged
