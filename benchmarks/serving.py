@@ -16,8 +16,16 @@ executables, asserting the pipelined coords are bitwise identical and
 ``compile_count`` is unchanged across depths — the hard numerics contract
 of the pipelined engine, checked on every bench run.
 
+The engine path calibrates its measured cost model after the cold run
+(latency replays of every cached executable), so the warm/client paths run
+with latency-priced launch sizing; each retire's predicted-vs-actual error
+is reported, with a loud banner past a 2x median.  A deterministic bursty
+linger sub-bench (pure scheduler, manual clock) asserts the cost-priced
+adaptive linger wastes strictly fewer holds than the fixed budget.
+
 ``main`` returns a summary dict (throughputs, ratios, occupancy, pipeline
-stats); ``benchmarks/run.py --out`` writes it to the repo-root
+stats, cost-model calibration/prediction/linger-policy stats);
+``benchmarks/run.py --out`` writes it to the repo-root
 ``BENCH_serving.json`` the nightly job uploads.
 
 ``--kernels {pallas,ref,auto}`` selects the kernel backend for every path
@@ -46,7 +54,8 @@ from repro.data.pipeline import ProteinSampler
 from repro.kernels import dispatch
 from repro.launch.serve import priority_tiers
 from repro.models.ppm import init_ppm, ppm_forward
-from repro.serving import (EngineMetrics, FoldEngine, make_serving_mesh,
+from repro.serving import (CostModel, EngineMetrics, FoldEngine, FoldRequest,
+                           TokenBudgetScheduler, calibrate, make_serving_mesh,
                            pad_to_bucket, parse_buckets)
 
 
@@ -62,6 +71,65 @@ def _warn_if_slower(name: str, ratio: float) -> None:
           f"# WARNING: throughput ratio {ratio:.2f}x < 1.0 — the batching "
           f"machinery is a net loss on this trace\n"
           f"# {bar}", flush=True)
+
+
+def _warn_if_mispredicting(stats) -> None:
+    """A cost table whose median prediction is off by more than 2x is
+    mis-calibrated — every decision it prices (feasibility verdicts,
+    linger holds, launch sizing) is running on bad data."""
+    if not stats or not stats.get("predictions"):
+        return
+    p50 = stats["prediction_error"]["p50"]
+    if p50 <= 2.0:
+        return
+    bar = "!" * 72
+    print(f"# {bar}\n"
+          f"# WARNING: cost-model predictions are off by {p50:.2f}x at the "
+          f"median (> 2.0x)\n"
+          f"# WARNING: the calibration table does not describe this "
+          f"machine's measured latencies —\n"
+          f"# WARNING: re-run --calibrate before trusting feasibility or "
+          f"linger verdicts priced on it\n"
+          f"# {bar}", flush=True)
+
+
+def bench_linger_policy(adaptive: bool, *, bursts: int = 6,
+                        burst_size: int = 3) -> dict:
+    """Deterministic bursty trace on a pure scheduler (no engine, no real
+    clock): ``bursts`` groups of ``burst_size`` same-bucket arrivals 2ms
+    apart, separated by 200ms of silence, under a 50ms linger cap and a
+    cost model calibrated to solo=100ms / marginal=10ms per row.
+
+    The fixed policy burns the whole cap after every burst — holds that
+    never attract a fill (``linger_bad_holds``).  The adaptive policy
+    launches the moment the predicted next arrival (median gap ~2ms) is
+    overdue, so a burst's tail costs at most one hold."""
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(64, 1), 100.0, samples=3)
+    cm.record_calibration(cm.key_for(64, 4), 130.0, samples=3)
+    sched = TokenBudgetScheduler((64,), max_tokens_per_batch=256,
+                                 max_batch=4, linger_ms=50.0,
+                                 cost_model=cm, adaptive_linger=adaptive)
+    aat = np.zeros(48, np.int32)
+    t, rid, launches = 1000.0, 0, 0
+    for _ in range(bursts):
+        for i in range(burst_size):
+            if i:
+                t += 0.002
+            assert sched.submit(FoldRequest(rid, aat), t) is None
+            rid += 1
+        for _ in range(40):              # the pump's post-burst poll loop
+            if sched.next_batch(t) is not None:
+                launches += 1
+                break
+            t += 0.005
+        t += 0.200                       # inter-burst silence
+    while sched.next_batch(t, allow_linger=False) is not None:
+        launches += 1                    # drain bypasses holds, like the pump
+    return {"policy": "adaptive" if adaptive else "fixed",
+            "launches": launches, "holds": sched.linger_holds,
+            "bad_holds": sched.linger_bad_holds,
+            "decisions": dict(sched.linger_decisions)}
 
 
 def _trace(n: int, min_len: int, max_len: int):
@@ -165,14 +233,28 @@ def main(argv=None) -> dict:
                         inflight_depth=args.inflight_depth,
                         linger_ms=args.batch_linger_ms)
     eng_cold, _ = bench_engine(engine, seqs)
+    compiles_cold = engine.compile_count
+
+    # measured cost model: replay every cached executable (plus the warmup
+    # ladder, so compile_count may grow HERE — the steady-state recompile
+    # asserts below measure against the post-calibration count) and freeze
+    # median latencies; every warm-path run after this is priced in ms
+    t_cal = time.perf_counter()
+    calibrate(engine.core)
+    cal_s = time.perf_counter() - t_cal
+    cm = engine.core.cost_model
     compiles_after_cold = engine.compile_count
+    emit("serving.costmodel.calibrate", cal_s * 1e6,
+         f"entries={cm.calibrated_count} "
+         f"ladder_compiles={compiles_after_cold - compiles_cold}")
+
     eng_warm, results = bench_engine(engine, seqs)
     assert engine.compile_count == compiles_after_cold, "steady state recompiled"
     eng_summary = engine.metrics.summary()
     eng_ratio = seq_warm / eng_warm
     emit("serving.engine.cold", eng_cold * 1e6,
          f"{len(seqs) / eng_cold:.2f}req/s {tokens / eng_cold:.1f}tok/s "
-         f"compiles={compiles_after_cold} kernels={backend}")
+         f"compiles={compiles_cold} kernels={backend}")
     emit("serving.engine.warm", eng_warm * 1e6,
          f"{len(seqs) / eng_warm:.2f}req/s {tokens / eng_warm:.1f}tok/s "
          f"speedup_vs_seq={eng_ratio:.2f}x "
@@ -199,6 +281,17 @@ def main(argv=None) -> dict:
          f"p99_wait_ms={cli_summary['queue_wait_ms']['p99']:.1f} "
          f"expired={cli_summary['expired']}")
     _warn_if_slower("client", cli_ratio)
+
+    # prediction quality: every retire compared the table's predicted run
+    # ms against the tracer-clocked actual; a median error factor past 2x
+    # means the calibration does not describe this machine
+    cost_stats = cli_summary.get("cost_model")
+    if cost_stats and cost_stats.get("predictions"):
+        emit("serving.costmodel.prediction", 0.0,
+             f"n={cost_stats['predictions']} "
+             f"err_p50={cost_stats['prediction_error']['p50']:.2f}x "
+             f"err_p95={cost_stats['prediction_error']['p95']:.2f}x")
+    _warn_if_mispredicting(cost_stats)
 
     # hard numerics contract: the pipelined run must be bitwise identical
     # to a depth-1 synchronous pump over the same warm executables, with
@@ -228,6 +321,22 @@ def main(argv=None) -> dict:
     emit("serving.admission.peak_est", 0.0,
          f"{peak / 1e6:.1f}MB<=budget={budget}MB "
          f"rejected={len(results) - len(served)}")
+
+    # linger-policy sub-bench: the SAME deterministic bursty trace under
+    # the fixed 50ms budget vs the cost-priced adaptive policy — the
+    # adaptive policy must waste strictly fewer holds (the whole point of
+    # pricing the wait in measured ms)
+    linger_fixed = bench_linger_policy(False)
+    linger_adaptive = bench_linger_policy(True)
+    assert linger_adaptive["bad_holds"] < linger_fixed["bad_holds"], (
+        f"adaptive linger wasted {linger_adaptive['bad_holds']} holds vs "
+        f"{linger_fixed['bad_holds']} fixed — pricing made lingering WORSE "
+        f"on the bursty trace")
+    emit("serving.linger.policy", 0.0,
+         f"bad_holds fixed={linger_fixed['bad_holds']} "
+         f"adaptive={linger_adaptive['bad_holds']} "
+         f"(launches {linger_fixed['launches']}/"
+         f"{linger_adaptive['launches']})")
 
     # pipeline-overlap evidence from the span trace: batches whose dispatch
     # began before the previous batch's retire finished (the whole point of
@@ -275,6 +384,15 @@ def main(argv=None) -> dict:
                      "compiles_unchanged_across_depths": True},
         "admission": {"peak_est_mb": peak / 1e6,
                       "budget_mb": args.mem_budget_mb},
+        "cost_model": {
+            "calibrate_s": cal_s,
+            "table_entries": cm.entry_count,
+            "calibrated_entries": cm.calibrated_count,
+            "floors": dict(cm.floors),
+            "prediction": cost_stats,
+            "linger_policy": {"fixed": linger_fixed,
+                              "adaptive": linger_adaptive},
+        },
     }
 
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import contextlib
 import math
+import os
 
 import jax
 
@@ -41,9 +42,67 @@ AUTO = "auto"
 BACKENDS = (REF, PALLAS, AUTO)
 
 # auto-mode shape floors: below these the kernel-launch bookkeeping beats
-# any fusion win, so auto stays on the XLA ref even on TPU
+# any fusion win, so auto stays on the XLA ref even on TPU.  These are the
+# STATIC fallbacks (unprofiled estimates); calibrated crossover points from
+# a measured cost table override them via ``set_calibrated_floors`` (the
+# ``--cost-table`` serve flow) or the REPRO_MIN_FLASH_SEQ /
+# REPRO_MIN_QMM_TOKENS env vars, and auto labels then say so
+# (``auto:calibrated:...`` vs the plain static ``auto:...``).
 MIN_FLASH_SEQ = 128          # min(Sq, Skv) for the flash path
 MIN_QMM_TOKENS = 64          # flattened token count for the AAQ matmul
+
+ENV_FLASH_SEQ = "REPRO_MIN_FLASH_SEQ"
+ENV_QMM_TOKENS = "REPRO_MIN_QMM_TOKENS"
+
+_CALIBRATED_FLOORS: dict[str, int] = {}
+
+
+def set_calibrated_floors(*, flash_seq: int | None = None,
+                          qmm_tokens: int | None = None) -> None:
+    """Install measured crossover points (from a calibrated cost table) as
+    the auto-mode floors process-wide.  ``None`` leaves that floor static."""
+    _CALIBRATED_FLOORS.clear()
+    if flash_seq is not None:
+        _CALIBRATED_FLOORS["flash_seq"] = int(flash_seq)
+    if qmm_tokens is not None:
+        _CALIBRATED_FLOORS["qmm_tokens"] = int(qmm_tokens)
+
+
+def clear_calibrated_floors() -> None:
+    _CALIBRATED_FLOORS.clear()
+
+
+def _env_floor(name: str) -> int | None:
+    v = os.environ.get(name)
+    if v is None or v == "":
+        return None
+    try:
+        return int(v)
+    except ValueError as err:
+        raise ValueError(f"{name}={v!r} is not an int") from err
+
+
+def effective_floors() -> tuple[int, int, str]:
+    """The auto-mode floors in force right now: ``(flash_seq, qmm_tokens,
+    source)`` with source ``"calibrated"`` when either floor comes from a
+    cost table or env override, ``"static"`` otherwise.  Env vars are read
+    at call time so tests and one-off runs can override without imports
+    racing."""
+    flash = _env_floor(ENV_FLASH_SEQ)
+    qmm = _env_floor(ENV_QMM_TOKENS)
+    if flash is None:
+        flash = _CALIBRATED_FLOORS.get("flash_seq")
+    if qmm is None:
+        qmm = _CALIBRATED_FLOORS.get("qmm_tokens")
+    source = "calibrated" if (flash is not None or qmm is not None) \
+        else "static"
+    return (flash if flash is not None else MIN_FLASH_SEQ,
+            qmm if qmm is not None else MIN_QMM_TOKENS,
+            source)
+
+
+def floors_source() -> str:
+    return effective_floors()[2]
 
 # interpret-mode block override: the interpreter executes the grid serially
 # with a large fixed per-step overhead, so correctness-path runs want the
@@ -112,11 +171,11 @@ def _resolve(backend: str | None, auto_wants_pallas: bool) -> str:
 
 
 def resolve_attention(sq: int, skv: int, *, backend: str | None = None) -> str:
-    return _resolve(backend, min(sq, skv) >= MIN_FLASH_SEQ)
+    return _resolve(backend, min(sq, skv) >= effective_floors()[0])
 
 
 def resolve_matmul(n_tokens: int, *, backend: str | None = None) -> str:
-    return _resolve(backend, n_tokens >= MIN_QMM_TOKENS)
+    return _resolve(backend, n_tokens >= effective_floors()[1])
 
 
 def attention_is_pallas(sq: int, skv: int, *, backend: str | None = None) -> bool:
@@ -143,6 +202,11 @@ def describe(backend: str | None = None, *, seq: int | None = None,
     ``qmm_tokens`` given there is no attention shape to resolve against,
     so the attention half is honestly unknown — ``auto:attn=?;qmm=<q>`` —
     rather than a capability-only guess claiming pallas for attention.
+
+    When calibrated floors are in force (cost table / env override) the
+    auto prefix becomes ``auto:calibrated:`` so reports show whether the
+    resolution was priced on measured crossovers or the static estimates
+    (plain ``auto:`` is the static form).
     """
     mode = _check(backend) if backend is not None else _MODE
     interp = interpret_mode()
@@ -151,17 +215,19 @@ def describe(backend: str | None = None, *, seq: int | None = None,
         return "pallas-interpret" if inner == PALLAS and interp else inner
 
     if mode == AUTO:
+        prefix = "auto:calibrated" if floors_source() == "calibrated" \
+            else "auto"
         if seq is None and qmm_tokens is None:
-            return f"auto:{tag(_resolve(AUTO, True))}"
+            return f"{prefix}:{tag(_resolve(AUTO, True))}"
         if qmm_tokens is None:
             qmm_tokens = seq * seq
         qmm = resolve_matmul(qmm_tokens, backend=AUTO)
         if seq is None:
-            return f"auto:attn=?;qmm={tag(qmm)}"
+            return f"{prefix}:attn=?;qmm={tag(qmm)}"
         attn = resolve_attention(seq, seq, backend=AUTO)
         if attn == qmm:
-            return f"auto:{tag(attn)}"
-        return f"auto:attn={tag(attn)};qmm={tag(qmm)}"
+            return f"{prefix}:{tag(attn)}"
+        return f"{prefix}:attn={tag(attn)};qmm={tag(qmm)}"
     return tag(mode)
 
 

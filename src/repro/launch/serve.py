@@ -70,7 +70,8 @@ from repro.models import lm
 from repro.models.ppm import init_ppm, ppm_forward, tm_score
 from repro.serving import (CSV_HEADER, LM_CSV_HEADER, FleetRouter,
                            FoldClient, FoldHTTPServer, LMClient,
-                           MetricsServer, csv_row, jax_profile, lm_csv_row,
+                           MetricsServer, calibrate, csv_row, install_floors,
+                           jax_profile, lm_csv_row, load_cost_table,
                            make_serving_mesh, pad_to_bucket, parse_buckets,
                            parse_chunk_spec)
 from repro.serving.observability.httpd import parse_hostport
@@ -134,11 +135,18 @@ def serve_http(args, cfg, params, buckets) -> int:
 
     try:
         host, port = parse_hostport(args.listen)
-    except ValueError as e:
+        if args.cost_table:
+            load_cost_table(args.cost_table)   # fail loudly before binding
+    except (ValueError, FileNotFoundError) as e:
         print(f"error: {e}")
         return 2
 
     def factory(i: int) -> FoldClient:
+        # each replica binds its own copy of the persisted cost table (a
+        # CostModel is bound to exactly one core); floors install once,
+        # process-wide
+        cost_model = (load_cost_table(args.cost_table)
+                      if args.cost_table else None)
         client = FoldClient(
             params, cfg, args.scheme, buckets=buckets,
             max_tokens_per_batch=args.max_tokens_per_batch,
@@ -147,13 +155,17 @@ def serve_http(args, cfg, params, buckets) -> int:
             mesh=make_serving_mesh(args.mesh), shard_threshold=args.shard_threshold,
             inflight_depth=args.inflight_depth,
             linger_ms=args.batch_linger_ms,
-            chunk_size=args.chunk_size)
+            adaptive_linger=not args.no_adaptive_linger,
+            chunk_size=args.chunk_size, cost_model=cost_model)
         client.tracer.set_metadata(
             replica=i, scheme=args.scheme,
             kernels=dispatch.describe(args.kernels), buckets=list(buckets),
             inflight_depth=args.inflight_depth,
             **client.core.placement.describe(),
             **client.core.chunk.describe())
+        if cost_model is not None:
+            install_floors(cost_model)
+            client.core.warmup_from_table()
         if args.warmup:
             client.warmup()
         return client
@@ -218,8 +230,22 @@ def serve_ppm(args):
     except ValueError as e:
         print(f"error: {e}")
         return 2
+    if args.calibrate and args.listen is not None:
+        print("error: --calibrate is an inline warmup mode; run it without "
+              "--listen, then point the server at the table with "
+              "--cost-table")
+        return 2
     if args.listen is not None:
         return serve_http(args, cfg, params, buckets)
+    # measured cost model: --cost-table PATH reloads a persisted table so
+    # this restart starts smart; --calibrate (re)builds it in place
+    cost_model = None
+    if args.cost_table and not args.calibrate:
+        try:
+            cost_model = load_cost_table(args.cost_table)
+        except (FileNotFoundError, ValueError) as e:
+            print(f"error: {e}")
+            return 2
     client = FoldClient(
         params, cfg, args.scheme, buckets=buckets,
         max_tokens_per_batch=args.max_tokens_per_batch,
@@ -228,7 +254,8 @@ def serve_ppm(args):
         mesh=mesh, shard_threshold=args.shard_threshold,
         inflight_depth=args.inflight_depth,
         linger_ms=args.batch_linger_ms,
-        chunk_size=args.chunk_size)
+        adaptive_linger=not args.no_adaptive_linger,
+        chunk_size=args.chunk_size, cost_model=cost_model)
     client.tracer.set_metadata(
         scheme=args.scheme, kernels=dispatch.describe(args.kernels),
         buckets=list(buckets), inflight_depth=args.inflight_depth,
@@ -238,8 +265,29 @@ def serve_ppm(args):
     if args.metrics_port is not None:
         server = MetricsServer(client, port=args.metrics_port).start()
         print(f"# metrics endpoint {server.url}/metrics")
+    cm = client.core.cost_model
+    if args.calibrate:
+        # replay every cached executable with fake data, record measured
+        # latencies (median-of-k, warm, engine clock), persist below
+        calibrate(client.core)
+        install_floors(cm)
+        print(f"# calibrated entries={cm.entry_count} "
+              f"floors={cm.floors.get('flash_seq')}/"
+              f"{cm.floors.get('qmm_tokens')} "
+              f"({cm.floors.get('source')})", flush=True)
+    elif cost_model is not None:
+        install_floors(cm)
+        warmed = client.core.warmup_from_table()
+        print(f"# cost table loaded {args.cost_table} "
+              f"entries={cm.entry_count} calibrated={cm.calibrated_count} "
+              f"warmed={warmed} executables", flush=True)
     if args.warmup:
         client.warmup()
+    client.metrics.record_cost_table(cm.entry_count, cm.calibrated_count,
+                                     cm.age_s())
+    # everything the table (or static warmup) pre-compiled is warm; the
+    # steady-state contract is that serving adds ZERO compiles on top
+    warm_compiles = client.core.compile_count
     tiers = priority_tiers(len(seqs), args.priority_split)
     t0 = time.perf_counter()
     with jax_profile(args.jax_profile):
@@ -282,6 +330,22 @@ def serve_ppm(args):
           f"max_inflight={p['max_inflight']} batches={p['batches']} "
           f"mean_occupancy={p['mean_batch_occupancy']:.3f} "
           f"linger_ms={p['linger_ms']:.0f} linger_holds={p['linger_holds']}")
+    c = s["cost_model"]
+    print(f"# cost_model entries={c['table_entries']} "
+          f"calibrated={c['table_calibrated']} "
+          f"predictions={c['predictions']} "
+          f"pred_err_p50={c['prediction_error']['p50']:.2f} "
+          f"bad_holds={c['linger_bad_holds']} "
+          f"infeasible={sum(c['infeasible'].values())} "
+          f"adaptive_linger={'off' if args.no_adaptive_linger else 'on'} "
+          f"post_warmup_compiles={client.core.compile_count - warm_compiles}")
+    if args.calibrate:
+        # persisted AFTER serving so launch sizes discovered by the live
+        # trace ride along — a --cost-table restart warms the WHOLE set
+        path = args.cost_table or "cost_table.json"
+        cm.save(path)
+        print(f"# cost table -> {path} entries={cm.entry_count} "
+              f"calibrated={cm.calibrated_count}")
     for b in s["buckets"]:
         print(f"# bucket={b['bucket']} n={b['requests']} "
               f"compiles={b['compiles']} wait_ms={b['mean_queue_wait_ms']:.1f} "
@@ -515,10 +579,30 @@ def main(argv=None):
                          "launched but not yet retired (1 = synchronous; "
                          "results are bitwise-identical at any depth)")
     ap.add_argument("--batch-linger-ms", type=float, default=0.0,
-                    help="fill-or-timeout: hold an underfull batch up to "
-                         "this long past its most urgent arrival so same-"
-                         "bucket requests can fill its dummy rows (0 = "
-                         "launch immediately)")
+                    help="fill-or-timeout CAP: hold an underfull batch up "
+                         "to this long past its most urgent arrival so "
+                         "same-bucket requests can fill its dummy rows (0 "
+                         "= launch immediately); inside the cap the "
+                         "adaptive policy prices each hold in measured ms "
+                         "(see --no-adaptive-linger)")
+    ap.add_argument("--no-adaptive-linger", action="store_true",
+                    help="disable arrival-rate-driven linger pricing and "
+                         "hold underfull batches for the full fixed "
+                         "--batch-linger-ms budget")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="calibration warmup: replay every cached "
+                         "executable (bucket, launch_batch, scheme, "
+                         "placement, chunk) with fake data, record real "
+                         "median-of-k latencies into the cost model, and "
+                         "persist the provenance-stamped table to "
+                         "--cost-table (default cost_table.json) after "
+                         "serving")
+    ap.add_argument("--cost-table", default=None, metavar="PATH",
+                    help="persisted cost-table JSON: with --calibrate, "
+                         "where to write it; without, load it so this "
+                         "restart starts smart (table keys pre-compile, "
+                         "calibrated dispatch floors install, scheduling "
+                         "decisions are priced in measured ms)")
     ap.add_argument("--priority-split", type=float, default=0.0,
                     help="fraction of requests submitted at priority 1 "
                          "(interleaved); the rest run at priority 0")

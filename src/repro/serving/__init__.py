@@ -14,6 +14,10 @@ from repro.serving.client import (ADMITTED, CANCELLED, DONE, EXPIRED,
                                   HANDLE_STATES, LEGAL_TRANSITIONS, QUEUED,
                                   REJECTED as HANDLE_REJECTED, RUNNING,
                                   TERMINAL_STATES, FoldClient, FoldHandle)
+from repro.serving.costmodel import (CostEntry, CostModel, calibrate,
+                                     calibrate_floors, install_floors,
+                                     load_cost_table,
+                                     prediction_error_factor)
 from repro.serving.engine import (BatchExecutionError, EngineCore,
                                   FoldEngine, InFlightBatch)
 from repro.serving.events import (EVENT_KINDS, EVENT_ORDER, TERMINAL_EVENTS,
@@ -68,6 +72,9 @@ __all__ = [
     "TokenBudgetScheduler", "ScheduledBatch", "pow2_buckets", "parse_buckets",
     "static_batch_for", "EngineMetrics", "CompileWatcher", "CSV_HEADER",
     "csv_row", "percentiles", "pad_to_bucket", "reset_compile_watch",
+    # measured cost model (calibration + priced scheduling)
+    "CostModel", "CostEntry", "calibrate", "calibrate_floors",
+    "install_floors", "load_cost_table", "prediction_error_factor",
     # observability (tracing + metrics registry + scrape endpoint)
     "Span", "Tracer", "span_tree", "pipeline_overlaps",
     "validate_chrome_trace", "MetricsRegistry", "MetricsServer",

@@ -244,10 +244,18 @@ class AdmissionController:
 
     def explain(self, ns: int, batch: int = 1, shards: int | None = None,
                 chunk=POLICY) -> dict:
-        """Breakdown for reports/debugging (MB, not bytes)."""
+        """Breakdown for reports/debugging (MB, not bytes).  When a cost
+        model is attached (``self.cost_model``, wired by the serve flow)
+        the breakdown also carries the MEASURED predicted run latency for
+        this (bucket, batch) — memory says whether it fits, the cost model
+        says how long it takes."""
         k = self._shards(ns, shards)
         c = self._chunk(ns, chunk)
+        cm = getattr(self, "cost_model", None)
+        predicted = (None if cm is None
+                     else cm.predict_run_ms(ns, batch))
         return {
+            "predicted_run_ms": predicted,
             "bucket": ns, "batch": batch, "shards": k,
             "chunk_size": c or 0,
             "estimator": self.estimator_for(ns, c),

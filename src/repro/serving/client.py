@@ -179,8 +179,10 @@ class FoldClient:
                  mesh=None, shard_threshold: int | None = None,
                  chunk_size: int | str | None = None,
                  inflight_depth: int = 2, linger_ms: float = 0.0,
+                 adaptive_linger: bool = True,
                  clock: Callable[[], float] = time.monotonic,
-                 core: EngineCore | None = None):
+                 core: EngineCore | None = None,
+                 cost_model=None):
         if core is None:
             from repro.kernels import dispatch
             core = EngineCore(
@@ -191,13 +193,18 @@ class FoldClient:
                 kernels=dispatch.AUTO if kernels is None else kernels,
                 keep_distogram=keep_distogram, mesh=mesh,
                 shard_threshold=shard_threshold, chunk_size=chunk_size,
-                inflight_depth=inflight_depth, clock=clock)
+                inflight_depth=inflight_depth, clock=clock,
+                cost_model=cost_model)
         self.core = core
         self.clock = core.clock
+        # the scheduler prices feasibility/linger against the CORE's cost
+        # model — the same table the engine's launch sizing reads and every
+        # retire() refines
         self.scheduler = TokenBudgetScheduler(
             core.buckets, max_tokens_per_batch=core.max_tokens_per_batch,
             max_batch=core.max_batch, admission=core.admission,
-            placement=core.placement, chunk=core.chunk, linger_ms=linger_ms)
+            placement=core.placement, chunk=core.chunk, linger_ms=linger_ms,
+            cost_model=core.cost_model, adaptive_linger=adaptive_linger)
         # the pump's own FIFO mirror of dispatched-not-retired batches: the
         # client terminates handles from THIS deque, so a retire failure
         # (or a monkeypatched core) can never desync results from handles
@@ -298,7 +305,7 @@ class FoldClient:
             adm = self.tracer.begin("admission", process=PROC_REQUESTS,
                                     thread=track, parent=root, t=now)
             rej = self.scheduler.submit(req, now)
-            self.tracer.end(adm, verdict="reject" if rej is not None
+            self.tracer.end(adm, verdict=rej.verdict if rej is not None
                             else "accept")
             meta = {"length": req.length, "priority": req.priority,
                     "deadline_s": req.deadline_s}
@@ -315,9 +322,12 @@ class FoldClient:
                     priority=req.priority,
                     bucket=self.core.bucket_for(req.length) or 0)
                 self.core.metrics.record(handle._result)
+                if rej.verdict == "infeasible":
+                    self.core.metrics.record_infeasible("submit")
                 self.events.emit(ev.SUBMITTED, req.request_id, **meta)
                 self.events.emit(ev.REJECTED, req.request_id,
-                                 reason=rej.reason, **meta)
+                                 reason=rej.reason, verdict=rej.verdict,
+                                 **meta)
             else:
                 handle = FoldHandle(self, req, QUEUED, now)
                 handle.spans = {
@@ -379,6 +389,29 @@ class FoldClient:
                              deadline_s=req.deadline_s,
                              queued_ms=(now - req.arrival_time) * 1e3)
             out.append(handle._result)
+        # infeasible sweep: the deadline hasn't passed yet, but the
+        # bucket's CALIBRATED solo latency no longer fits inside it —
+        # terminate now (verdict "infeasible") instead of queueing to die
+        for req in self.scheduler.purge_infeasible(now):
+            handle = self.handles.pop(req.request_id)
+            handle._advance(EXPIRED, now)
+            self._end_request_spans(handle, "infeasible", now)
+            remaining_ms = (req.deadline_at - now) * 1e3
+            handle._result = FoldResult(
+                request_id=req.request_id, length=req.length,
+                status=R_EXPIRED, priority=req.priority,
+                reason=(f"deadline infeasible: {remaining_ms:.1f}ms remain "
+                        f"but the bucket's measured solo latency exceeds "
+                        f"it"),
+                bucket=self.core.bucket_for(req.length) or 0,
+                queue_wait_ms=(now - req.arrival_time) * 1e3)
+            self.core.metrics.record(handle._result)
+            self.core.metrics.record_infeasible("queue")
+            self.events.emit(ev.EXPIRED, req.request_id,
+                             deadline_s=req.deadline_s,
+                             verdict="infeasible",
+                             queued_ms=(now - req.arrival_time) * 1e3)
+            out.append(handle._result)
         if out:
             self.core.metrics.record_queue_depth(self.scheduler.pending)
             self._cond.notify_all()
@@ -420,6 +453,9 @@ class FoldClient:
                                                   allow_linger=allow_linger)
                 self.core.metrics.record_linger(self.scheduler.linger_holds,
                                                 self.scheduler.linger_ms)
+                self.core.metrics.record_linger_decisions(
+                    dict(self.scheduler.linger_decisions),
+                    self.scheduler.linger_bad_holds)
                 if batch is None or not batch.requests:
                     return None, expired
                 if batch.deferred:

@@ -101,6 +101,7 @@ import jax.numpy as jnp
 
 from repro.core.schemes import FP16Baseline, QuantScheme, make_scheme
 from repro.kernels import dispatch
+from repro.serving.costmodel import CostModel
 from repro.serving.longfold import ChunkPolicy
 from repro.serving.metrics import reset_compile_watch
 from repro.serving.observability.profiler import annotate
@@ -158,7 +159,8 @@ class EngineCore:
                  inflight_depth: int = 2,
                  clock: Callable[[], float] = time.monotonic,
                  tracer: Tracer | None = None,
-                 workload: Workload | None = None):
+                 workload: Workload | None = None,
+                 cost_model: CostModel | None = None):
         from repro.serving.scheduler import pow2_buckets
         if inflight_depth < 1:
             raise ValueError(f"inflight_depth must be >= 1, "
@@ -216,6 +218,15 @@ class EngineCore:
         self._executables: dict[tuple[int, int, str, str, int], object] = {}
         self._placed_params: dict[str, object] = {}
         self._compile_count = 0
+        # measured per-executable latencies: the table every priced decision
+        # (launch-size reuse, deadline feasibility, adaptive linger) reads;
+        # pre-loaded from ``--cost-table`` or calibrated in place, refined
+        # online by every retire()
+        self.cost_model = (CostModel() if cost_model is None
+                           else cost_model).bind(self)
+        # admission explain() surfaces measured predicted latency next to
+        # its memory breakdown
+        self.admission.cost_model = self.cost_model
 
     # -- shape policy -----------------------------------------------------
     def bucket_for(self, length: int) -> int | None:
@@ -234,11 +245,17 @@ class EngineCore:
                         placement) -> int:
         """Occupancy-fitted launch size for ``n`` real rows: the exact
         count, unless a slightly larger executable is already cached for
-        this (bucket, scheme, placement) — reusing it pads at most
-        ``max(1, n // 2)`` dummy rows, which is far cheaper than a fresh
-        multi-second compile for a one-off trailing batch.  Deterministic
-        given the trace (cache evolution is trace-determined), so depth-1
-        and pipelined runs launch identical shapes."""
+        this (bucket, scheme, placement) and reusing it is cheaper than
+        compiling the exact size.  With a calibrated cost model the choice
+        is priced in measured milliseconds — predicted dummy-row burn
+        (``(b - n) * marginal_row_ms``) against the measured compile cost
+        for this bucket's executables; without one it falls back to the
+        static waste guard (at most ``max(1, n // 2)`` dummy rows).
+
+        Deterministic given the trace: calibrated entries are FROZEN at
+        calibration (live EWMA drift never feeds this), so depth-1 and
+        pipelined runs — and a restart reloading the same persisted table —
+        launch identical shapes."""
         cap = self.batch_for_bucket(bucket)
         n = min(n, cap)
         chunk = self.chunk.chunk_for(bucket) or 0
@@ -246,8 +263,14 @@ class EngineCore:
                         if bk == bucket and sn == scheme.name
                         and pl == placement.label and ck == chunk
                         and b >= n)
+        marginal = self.cost_model.marginal_row_ms(bucket,
+                                                   calibrated_only=True)
+        compile_ms = self.cost_model.compile_ms_for(bucket)
         for b in cached:
-            if b - n <= max(1, n // 2):
+            if marginal is not None and compile_ms is not None:
+                if (b - n) * marginal <= compile_ms:
+                    return b
+            elif b - n <= max(1, n // 2):
                 return b
         return n
 
@@ -291,6 +314,8 @@ class EngineCore:
         self.metrics.record_compile(bucket, compile_s * 1e3,
                                     scheme=scheme.name,
                                     placement=placement.label)
+        # every cache miss prices future occupancy-vs-recompile choices
+        self.cost_model.record_compile(key, compile_s * 1e3)
         return compiled, compile_s
 
     def _params_for(self, placement):
@@ -329,6 +354,33 @@ class EngineCore:
                 self._executable(bucket, b, self.scheme)
                 if self.fidelity:
                     self._executable(bucket, b, self._fp_scheme)
+
+    def warmup_from_table(self) -> int:
+        """Pre-compile every cost-table key matching this engine's current
+        context (scheme — plus the FP twin when fidelity is on — placement
+        label, chunk plan, within bucket caps).  A restart reloading a
+        persisted table warms the previous run's WHOLE executable set, not
+        just the static ladder, so steady-state serving performs zero
+        compiles from the first batch.  Returns the number of table keys
+        warmed."""
+        want = {self.scheme.name: self.scheme}
+        if self.fidelity:
+            want[self._fp_scheme.name] = self._fp_scheme
+        buckets = set(self.buckets)
+        warmed = 0
+        for key in sorted(self.cost_model.entries, key=str):
+            bucket, b, scheme_name, label, chunk = key
+            if bucket not in buckets or scheme_name not in want:
+                continue
+            placement = self.placement.placement_for(bucket)
+            if (label != placement.label
+                    or chunk != (self.chunk.chunk_for(bucket) or 0)):
+                continue
+            if not 1 <= b <= self.batch_for_bucket(bucket):
+                continue
+            self._executable(bucket, b, want[scheme_name])
+            warmed += 1
+        return warmed
 
     # -- pipelined execution ----------------------------------------------
     @property
@@ -471,6 +523,20 @@ class EngineCore:
             raise BatchExecutionError(batch, e) from e
         tr.end(r_span)
         self.metrics.record_inflight(len(self._inflight))
+        # live refinement: predict BEFORE observing (the EWMA would
+        # otherwise be pulled toward the value it is judged against), then
+        # feed this batch's measured launch-to-ready latency back in
+        actual_ms = run_s * 1e3
+        predicted_ms = self.cost_model.predict_run_ms(flight.bucket,
+                                                      flight.launched_b)
+        if predicted_ms is not None:
+            self.metrics.record_prediction(predicted_ms, actual_ms)
+        self.cost_model.observe(
+            (flight.bucket, flight.launched_b, self.scheme.name,
+             flight.placement.label, flight.chunk_size), actual_ms)
+        self.metrics.record_cost_table(self.cost_model.entry_count,
+                                       self.cost_model.calibrated_count,
+                                       self.cost_model.age_s())
         results = self.workload.build_results(flight, run_s, payload)
         for r in results:
             self.metrics.record(r)

@@ -231,6 +231,30 @@ class EngineMetrics:
         self._m_driver_dropped = reg.counter(
             "fold_driver_errors_dropped_total",
             "Driver errors evicted from the bounded ring")
+        # cost-model telemetry: table inventory, how well predictions track
+        # reality, and what the priced linger/feasibility decisions did
+        self._m_cost_entries = reg.gauge(
+            "fold_cost_table_entries", "Cost-table entries by source",
+            ("source",))
+        self._m_cost_age = reg.gauge(
+            "fold_cost_table_age_seconds",
+            "Seconds since the cost table was calibrated (-1 = never)")
+        self._m_pred_error = reg.histogram(
+            "fold_cost_prediction_error_ratio",
+            "Predicted-vs-actual batch run ms, as max(p/a, a/p)")
+        self._m_linger_decisions = reg.counter(
+            "fold_linger_decisions_total",
+            "Linger hold/launch decisions by policy", ("decision",))
+        self._m_infeasible = reg.counter(
+            "fold_infeasible_total",
+            "Requests terminated as deadline-infeasible", ("stage",))
+        self.prediction_errors: list[float] = []   # max(p/a, a/p) factors
+        self.cost_table_entries: int = 0
+        self.cost_table_calibrated: int = 0
+        self.cost_table_age_s: float | None = None
+        self.linger_bad_holds: int = 0
+        self.linger_decisions: dict[str, int] = {}
+        self.infeasible: dict[str, int] = {}
 
     def record(self, r: FoldResult) -> None:
         self._m_requests.inc(status=r.status, bucket=r.bucket)
@@ -308,6 +332,46 @@ class EngineMetrics:
         if delta > 0:
             self._m_linger.inc(delta)
 
+    def record_prediction(self, predicted_ms: float, actual_ms: float) -> None:
+        """One batch's predicted-vs-actual run latency, recorded as the
+        symmetric error factor max(p/a, a/p) — 1.0 is a perfect model."""
+        if predicted_ms <= 0.0 or actual_ms <= 0.0:
+            return
+        factor = max(predicted_ms / actual_ms, actual_ms / predicted_ms)
+        with self._lock:
+            self.prediction_errors.append(factor)
+        self._m_pred_error.observe(factor)
+
+    def record_cost_table(self, entries: int, calibrated: int,
+                          age_s: float | None) -> None:
+        """Cost-table inventory gauges (the engine calls this per retire;
+        the serve CLI once after load/calibrate)."""
+        with self._lock:
+            self.cost_table_entries = entries
+            self.cost_table_calibrated = calibrated
+            self.cost_table_age_s = age_s
+        self._m_cost_entries.set(calibrated, source="calibrated")
+        self._m_cost_entries.set(entries - calibrated, source="online")
+        self._m_cost_age.set(-1.0 if age_s is None else age_s)
+
+    def record_linger_decisions(self, decisions: dict, bad_holds: int) -> None:
+        """Sync the scheduler's adaptive/fixed linger decision tallies
+        (idempotent, same delta pattern as ``record_linger``)."""
+        with self._lock:
+            for k, v in decisions.items():
+                delta = v - self.linger_decisions.get(k, 0)
+                if delta > 0:
+                    self._m_linger_decisions.inc(delta, decision=k)
+                self.linger_decisions[k] = v
+            self.linger_bad_holds = bad_holds
+
+    def record_infeasible(self, stage: str) -> None:
+        """One request terminated as deadline-infeasible; ``stage`` is
+        "submit" (rejected at intake) or "queue" (purged mid-queue)."""
+        with self._lock:
+            self.infeasible[stage] = self.infeasible.get(stage, 0) + 1
+        self._m_infeasible.inc(stage=stage)
+
     def record_admission(self, verdict: str, bucket: int,
                          estimator: str = "cubic") -> None:
         """One admission decision (ADMIT/REJECT/DEFER), including probes.
@@ -349,6 +413,20 @@ class EngineMetrics:
                 "linger_ms": self.linger_ms,
                 "linger_holds": self.linger_holds,
             }
+            errs = list(self.prediction_errors)
+            cost_model = {
+                "table_entries": self.cost_table_entries,
+                "table_calibrated": self.cost_table_calibrated,
+                "table_age_s": self.cost_table_age_s,
+                "predictions": len(errs),
+                "prediction_error": {
+                    "mean": sum(errs) / len(errs) if errs else 0.0,
+                    **percentiles(errs),
+                },
+                "linger_decisions": dict(self.linger_decisions),
+                "linger_bad_holds": self.linger_bad_holds,
+                "infeasible": dict(self.infeasible),
+            }
         served = [r for r in results if r.ok]
         tokens = sum(r.length for r in served)
         by_status = {s: sum(1 for r in results if r.status == s)
@@ -371,6 +449,7 @@ class EngineMetrics:
             "max_est_act_mb": max(
                 (r.est_activation_bytes for r in served), default=0) / 1e6,
             "pipeline": pipeline,
+            "cost_model": cost_model,
             "buckets": bucket_dicts,
         }
         return out

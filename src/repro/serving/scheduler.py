@@ -44,6 +44,21 @@ arrivals can fill the rows that would otherwise burn FLOPs as fully-masked
 padding.  Held buckets yield their turn to launchable ones; the pump polls
 again after ``hold_until``.  ``linger_ms=0`` (default) launches
 immediately, the historical behavior.
+
+Cost-model pricing (``cost_model`` set): two decisions stop running on
+guesses.  *Deadline feasibility* — a submit whose deadline is shorter than
+the measured time to clear the bucket's queue (calibrated entries only;
+online noise must never flip an irreversible verdict) is rejected
+immediately with ``verdict="infeasible"`` instead of queueing to die, and
+``purge_infeasible`` sweeps queued requests that can no longer make their
+deadline even launched solo right now.  *Adaptive linger* — inside the
+fixed ``linger_ms`` cap, a hold is kept only while the measured fill
+benefit (solo cost an arrival would otherwise pay, minus its marginal
+in-batch row cost) exceeds the predicted wait (median inter-arrival gap),
+and dropped the moment the predicted next arrival is overdue — so bursts
+fill batches and post-burst silence launches immediately instead of
+burning the whole budget.  ``linger_bad_holds`` counts holds that never
+attracted a fill (the bench compares it across policies).
 """
 from __future__ import annotations
 
@@ -127,6 +142,9 @@ class ScheduledBatch:
 class Rejection:
     request: FoldRequest
     reason: str
+    verdict: str = "reject"     # "reject" (admission/shape) or
+                                # "infeasible" (deadline priced vs measured
+                                # latency at submit)
 
 
 class TokenBudgetScheduler:
@@ -134,7 +152,7 @@ class TokenBudgetScheduler:
                  max_tokens_per_batch: int = 1024, max_batch: int = 8,
                  admission: AdmissionController | None = None,
                  placement=None, chunk=None, linger_ms: float = 0.0,
-                 tracer=None):
+                 tracer=None, cost_model=None, adaptive_linger: bool = True):
         if not buckets:
             raise ValueError("need at least one bucket edge")
         if linger_ms < 0:
@@ -151,11 +169,27 @@ class TokenBudgetScheduler:
         # immediately, the historical behavior)
         self.linger_ms = linger_ms
         self.tracer = tracer           # optional span Tracer: hold markers
+        # measured-latency pricing (None = every decision stays heuristic)
+        self.cost_model = cost_model
+        self.adaptive_linger = adaptive_linger
         self.linger_holds = 0          # next_batch turns that held a bucket
+        self.linger_bad_holds = 0      # holds that never attracted a fill
+        self.infeasible_rejects = 0    # submits rejected as deadline-infeasible
+        # adaptive-vs-fixed decision tallies (observability series)
+        self.linger_decisions: dict[str, int] = {
+            "hold_adaptive": 0, "launch_adaptive": 0,
+            "hold_fixed": 0, "launch_fixed": 0}
         self.hold_until: float | None = None   # earliest launch time among
                                                # buckets held this turn
         self._queues: dict[int, deque[FoldRequest]] = {
             b: deque() for b in self.buckets}
+        # recent same-bucket arrival times (client clock): the adaptive
+        # linger's arrival-rate estimate
+        self._arrivals: dict[int, deque[float]] = {
+            b: deque(maxlen=16) for b in self.buckets}
+        # per-bucket (size_at_last_hold, holds_pending): holds whose batch
+        # never grew before launching are counted bad at launch time
+        self._hold_state: dict[int, tuple[int, int]] = {}
         # queued requests by id: O(1) cancellation and the authoritative
         # ``pending`` count (deques may carry cancelled tombstones until
         # their bucket is next compacted)
@@ -182,9 +216,34 @@ class TokenBudgetScheduler:
             d = self.admission.admit(bucket, 1)
             if d.verdict == REJECT:
                 return Rejection(req, d.reason)
+        eta = self._admission_eta_ms(bucket)
+        if (eta is not None and req.deadline_s is not None
+                and req.deadline_s * 1e3 < eta):
+            # priced against MEASURED latency: queueing this request would
+            # only let it die in purge_expired; surface the verdict now
+            self.infeasible_rejects += 1
+            return Rejection(
+                req,
+                f"deadline infeasible: predicted completion {eta:.1f}ms at "
+                f"the back of bucket {bucket}'s queue exceeds deadline "
+                f"{req.deadline_s * 1e3:.1f}ms",
+                verdict="infeasible")
         self._queues[bucket].append(req)
         self._live[req.request_id] = req
+        self._arrivals[bucket].append(now)
         return None
+
+    def _admission_eta_ms(self, bucket: int) -> float | None:
+        """Predicted ms for a request arriving NOW to complete at the back
+        of its bucket's queue, in measured (calibrated-only) latencies.
+        None = no calibration for this bucket — feasibility is then not
+        checked, the historical behavior."""
+        if self.cost_model is None:
+            return None
+        ahead = sum(1 for r in self._queues[bucket]
+                    if r.request_id in self._live)
+        return self.cost_model.queue_eta_ms(bucket, ahead,
+                                            self.static_batch_for(bucket))
 
     @property
     def pending(self) -> int:
@@ -214,6 +273,31 @@ class TokenBudgetScheduler:
             self._queues[bucket] = alive
         return expired
 
+    def purge_infeasible(self, now: float) -> list[FoldRequest]:
+        """Drop and return queued requests that can no longer make their
+        deadline even launched solo right now — remaining budget smaller
+        than the bucket's *calibrated* solo latency.  A no-op without a
+        calibrated cost model: online EWMA noise must never expire work."""
+        if self.cost_model is None or not self.cost_model.has_calibration():
+            return []
+        doomed: list[FoldRequest] = []
+        for bucket, q in self._queues.items():
+            solo = self.cost_model.solo_ms(bucket, calibrated_only=True)
+            if solo is None:
+                continue
+            alive: deque[FoldRequest] = deque()
+            for r in q:
+                if r.request_id not in self._live:
+                    continue                      # cancelled tombstone
+                if (r.deadline_at is not None
+                        and (r.deadline_at - now) * 1e3 < solo):
+                    doomed.append(r)
+                    del self._live[r.request_id]
+                else:
+                    alive.append(r)
+            self._queues[bucket] = alive
+        return doomed
+
     # -- batch formation --------------------------------------------------
     def static_batch_for(self, bucket: int) -> int:
         """Max launch size for this bucket (shared shape-cap rule)."""
@@ -241,6 +325,37 @@ class TokenBudgetScheduler:
             if self.admission.admit(bucket, n + 1).verdict != ADMIT:
                 return "admission"
         return None
+
+    def _gap_ms(self, bucket: int) -> float | None:
+        """Median inter-arrival gap for this bucket's recent submits —
+        median, not mean, so one long inter-burst silence doesn't inflate
+        the estimate past every in-burst gap.  None = fewer than two
+        arrivals observed."""
+        arr = self._arrivals[bucket]
+        if len(arr) < 2:
+            return None
+        diffs = sorted((b - a) * 1e3 for a, b in zip(arr, list(arr)[1:]))
+        return diffs[len(diffs) // 2]
+
+    def _adaptive_hold(self, bucket: int, now: float) -> bool | None:
+        """Price an underfull hold in measured ms: hold only while the
+        predicted fill benefit (solo cost the next arrival would otherwise
+        pay minus its marginal in-batch row cost) covers the predicted wait
+        (median inter-arrival gap), and the predicted next arrival isn't
+        already overdue.  None = not enough data — caller falls back to the
+        fixed budget.  Reads live EWMA entries: a hold is reversible, so it
+        may track drift."""
+        if self.cost_model is None:
+            return None
+        gap = self._gap_ms(bucket)
+        solo = self.cost_model.solo_ms(bucket)
+        marginal = self.cost_model.marginal_row_ms(bucket)
+        if gap is None or solo is None or marginal is None:
+            return None
+        last = self._arrivals[bucket][-1]
+        if now > last + gap / 1e3:
+            return False     # predicted next arrival already missed: launch
+        return gap <= max(solo - marginal, 0.0)
 
     def next_batch(self, now: float | None = None, *,
                    allow_linger: bool = True) -> ScheduledBatch | None:
@@ -277,17 +392,38 @@ class TokenBudgetScheduler:
                 # never extend an older request's wait past its budget
                 release = (min(r.arrival_time for r in picked)
                            + self.linger_ms / 1e3)
-                if now < release:
+                hold = now < release
+                decision = "fixed"
+                if hold and self.adaptive_linger:
+                    # inside the cap, price the hold in measured ms; None =
+                    # no arrival/latency data yet, keep the fixed budget
+                    verdict = self._adaptive_hold(bucket, now)
+                    if verdict is not None:
+                        hold, decision = verdict, "adaptive"
+                if hold:
                     # hold: leave the queue untouched, try the next bucket
                     self.linger_holds += 1
+                    self.linger_decisions[f"hold_{decision}"] += 1
+                    held_size, pending = self._hold_state.get(
+                        bucket, (len(picked), 0))
+                    if len(picked) > held_size:
+                        # grew since the prior holds: those holds paid off
+                        held_size, pending = len(picked), 0
+                    self._hold_state[bucket] = (held_size, pending + 1)
                     self.hold_until = (release if self.hold_until is None
                                        else min(self.hold_until, release))
                     if self.tracer is not None:
                         self.tracer.instant(
                             "linger_hold", process="engine",
                             thread="scheduler", bucket=bucket,
-                            picked=len(picked), release=release)
+                            picked=len(picked), release=release,
+                            decision=decision)
                     continue
+                self.linger_decisions[f"launch_{decision}"] += 1
+            # launching: holds that never attracted a fill were wasted wait
+            held_size, pending = self._hold_state.pop(bucket, (0, 0))
+            if pending and len(picked) <= held_size:
+                self.linger_bad_holds += pending
             self._queues[bucket] = deque(q)
             for r in picked:
                 # pop, not del: direct scheduler users may queue duplicate

@@ -1,0 +1,452 @@
+"""Measured cost model tests: EWMA refinement vs frozen calibration,
+prediction/interpolation math, table persistence + provenance, the
+calibrate -> persist -> reload -> zero-compile round trip, deadline
+feasibility verdicts (submit-time and mid-queue), the cost-priced
+adaptive linger, launch-size pricing, and the calibrated dispatch
+floors."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduce_ppm_config
+from repro.core import make_scheme
+from repro.kernels import dispatch
+from repro.models.ppm import init_ppm
+from repro.serving import (CostModel, EngineMetrics, FoldClient, FoldRequest,
+                           TokenBudgetScheduler, calibrate, calibrate_floors,
+                           install_floors, load_cost_table,
+                           prediction_error_factor)
+from repro.serving.client import DONE, EXPIRED, QUEUED
+
+CFG = reduce_ppm_config()
+PARAMS = init_ppm(jax.random.PRNGKey(0), CFG)
+SCHEME = make_scheme("lightnobel_aaq")
+RNG = np.random.default_rng(13)
+
+
+def _seq(length: int) -> np.ndarray:
+    return RNG.integers(0, 20, length).astype(np.int32)
+
+
+class ManualClock:
+    def __init__(self, t: float = 1000.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _client(**kw) -> FoldClient:
+    kw.setdefault("buckets", (32,))
+    kw.setdefault("max_tokens_per_batch", 64)
+    kw.setdefault("max_batch", 2)
+    return FoldClient(PARAMS, CFG, SCHEME, **kw)
+
+
+@pytest.fixture(autouse=True)
+def _clean_floors():
+    """Calibrated floors are process-wide; never leak them across tests."""
+    yield
+    dispatch.clear_calibrated_floors()
+
+
+# --------------------------------------------------------------------------
+# the model itself: EWMA, calibration freeze, predictors
+# --------------------------------------------------------------------------
+def test_alpha_validation():
+    with pytest.raises(ValueError, match="alpha"):
+        CostModel(alpha=0.0)
+    with pytest.raises(ValueError, match="alpha"):
+        CostModel(alpha=1.5)
+
+
+def test_observe_ewma_math():
+    cm = CostModel(alpha=0.25)
+    k = cm.key_for(32, 1)
+    cm.observe(k, 100.0)                     # first sample seeds directly
+    assert cm.entries[k].run_ms == 100.0 and cm.entries[k].samples == 1
+    cm.observe(k, 200.0)                     # 100 + 0.25 * (200 - 100)
+    assert cm.entries[k].run_ms == pytest.approx(125.0)
+    assert cm.entries[k].samples == 2
+    assert cm.entries[k].calibrated_ms is None
+
+
+def test_calibration_freezes_while_ewma_drifts():
+    cm = CostModel(alpha=0.5)
+    k = cm.key_for(32, 1)
+    cm.record_calibration(k, 100.0, samples=3)
+    assert cm.entries[k].calibrated_ms == 100.0
+    assert cm.has_calibration() and cm.calibrated_count == 1
+    cm.observe(k, 300.0)                     # live drift
+    assert cm.entries[k].run_ms == pytest.approx(200.0)
+    assert cm.entries[k].calibrated_ms == 100.0     # frozen
+    # irreversible decisions read the frozen value only
+    assert cm.solo_ms(32, calibrated_only=True) == pytest.approx(100.0)
+    assert cm.solo_ms(32) == pytest.approx(200.0)
+
+
+def test_predict_interpolates_and_extrapolates():
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(64, 1), 100.0, samples=3)
+    cm.record_calibration(cm.key_for(64, 4), 130.0, samples=3)
+    assert cm.predict_run_ms(64, 1) == pytest.approx(100.0)   # exact
+    assert cm.predict_run_ms(64, 2) == pytest.approx(110.0)   # interp
+    assert cm.predict_run_ms(64, 8) == pytest.approx(170.0)   # extrap
+    assert cm.marginal_row_ms(64) == pytest.approx(10.0)
+    assert cm.solo_ms(64) == pytest.approx(100.0)
+    assert cm.predict_run_ms(32, 1) is None                   # no data
+    # below the smallest measured size: it can't cost more than it
+    cm2 = CostModel()
+    cm2.record_calibration(cm2.key_for(64, 2), 100.0, samples=3)
+    assert cm2.predict_run_ms(64, 1) == pytest.approx(100.0)
+
+
+def test_bucket_points_respect_context():
+    """Entries under another scheme/placement never leak into a bucket's
+    prediction — the key is the full executable-cache 5-tuple."""
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(64, 1), 100.0, samples=3)
+    cm.entries[(64, 1, "other_scheme", "single", 0)] = \
+        type(cm.entries[cm.key_for(64, 1)])(run_ms=9999.0,
+                                            calibrated_ms=9999.0)
+    assert cm.predict_run_ms(64, 1) == pytest.approx(100.0)
+
+
+def test_queue_eta_ms():
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(32, 1), 100.0, samples=3)
+    cm.record_calibration(cm.key_for(32, 2), 120.0, samples=3)
+    # 3 ahead at cap 2: one full batch ahead, then my own pair batch
+    assert cm.queue_eta_ms(32, 3, 2) == pytest.approx(120.0 + 120.0)
+    # empty queue: just my solo run
+    assert cm.queue_eta_ms(32, 0, 2) == pytest.approx(100.0)
+    assert cm.queue_eta_ms(64, 0, 2) is None        # uncalibrated bucket
+
+
+def test_prediction_error_factor():
+    assert prediction_error_factor(100.0, 100.0) == pytest.approx(1.0)
+    assert prediction_error_factor(50.0, 100.0) == pytest.approx(2.0)
+    assert prediction_error_factor(100.0, 50.0) == pytest.approx(2.0)
+    assert prediction_error_factor(0.0, 50.0) == float("inf")
+
+
+# --------------------------------------------------------------------------
+# persistence
+# --------------------------------------------------------------------------
+def test_persistence_roundtrip(tmp_path):
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(32, 2), 42.5, samples=3)
+    cm.observe(cm.key_for(64, 1), 7.0)
+    cm.record_compile(cm.key_for(32, 2), 900.0)
+    cm.floors = {"flash_seq": 128, "qmm_tokens": 64, "source": "pinned"}
+    cm.calibrated_at = 1234.5
+    path = str(tmp_path / "table.json")
+    cm.save(path)
+
+    back = load_cost_table(path)
+    assert back.entries[cm.key_for(32, 2)].calibrated_ms == 42.5
+    assert back.entries[cm.key_for(32, 2)].compile_ms == 900.0
+    assert back.entries[cm.key_for(64, 1)].calibrated_ms is None
+    assert back.floors["flash_seq"] == 128
+    assert back.calibrated_at == 1234.5
+    # every table is provenance-stamped at save time
+    for k in ("git_sha", "jax_version", "backend", "device_kind",
+              "device_count", "platform", "python", "timestamp_utc"):
+        assert k in back.provenance, k
+
+
+def test_load_rejects_bad_tables(tmp_path):
+    with pytest.raises(FileNotFoundError, match="--calibrate"):
+        load_cost_table(str(tmp_path / "missing.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"version": 99, "entries": {}}')
+    with pytest.raises(ValueError, match="version"):
+        load_cost_table(str(bad))
+
+
+# --------------------------------------------------------------------------
+# deadline feasibility (pure scheduler, manual time)
+# --------------------------------------------------------------------------
+def _seeded_model(bucket=32, solo=100.0) -> CostModel:
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(bucket, 1), solo, samples=3)
+    return cm
+
+
+def test_submit_infeasible_rejected_with_verdict():
+    sched = TokenBudgetScheduler((32,), max_tokens_per_batch=32,
+                                 max_batch=1, cost_model=_seeded_model())
+    # measured solo is 100ms; a 50ms deadline can never be met
+    rej = sched.submit(FoldRequest(1, _seq(20), deadline_s=0.05), now=0.0)
+    assert rej is not None and rej.verdict == "infeasible"
+    assert "deadline infeasible" in rej.reason
+    assert sched.infeasible_rejects == 1 and sched.pending == 0
+    # a deadline past the measured eta queues normally
+    assert sched.submit(FoldRequest(2, _seq(20), deadline_s=0.5), 0.0) is None
+    assert sched.pending == 1
+
+
+def test_uncalibrated_model_never_rejects_on_deadline():
+    """Online-only entries must not price irreversible verdicts."""
+    cm = CostModel()
+    cm.observe(cm.key_for(32, 1), 1e6)      # huge, but NOT calibrated
+    sched = TokenBudgetScheduler((32,), max_tokens_per_batch=32,
+                                 max_batch=1, cost_model=cm)
+    assert sched.submit(FoldRequest(1, _seq(20), deadline_s=0.01), 0.0) is None
+    assert sched.purge_infeasible(0.009) == []
+
+
+def test_purge_infeasible_mid_queue():
+    sched = TokenBudgetScheduler((32,), max_tokens_per_batch=32,
+                                 max_batch=1, cost_model=_seeded_model())
+    assert sched.submit(FoldRequest(1, _seq(20), deadline_s=0.5), 0.0) is None
+    # 450ms in: 50ms of budget left < the 100ms measured solo — the
+    # deadline has NOT passed yet, but it can no longer be met
+    doomed = sched.purge_infeasible(0.45)
+    assert [r.request_id for r in doomed] == [1]
+    assert sched.pending == 0
+    # idempotent: already purged
+    assert sched.purge_infeasible(0.46) == []
+
+
+# --------------------------------------------------------------------------
+# adaptive linger (pure scheduler, manual time)
+# --------------------------------------------------------------------------
+def _burst_model() -> CostModel:
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(64, 1), 100.0, samples=3)
+    cm.record_calibration(cm.key_for(64, 4), 130.0, samples=3)  # 10ms/row
+    return cm
+
+
+def _burst_sched(cm, adaptive=True) -> TokenBudgetScheduler:
+    return TokenBudgetScheduler((64,), max_tokens_per_batch=256, max_batch=4,
+                                linger_ms=50.0, cost_model=cm,
+                                adaptive_linger=adaptive)
+
+
+def test_adaptive_holds_in_burst_launches_when_overdue():
+    sched = _burst_sched(_burst_model())
+    sched.submit(FoldRequest(1, _seq(40)), 1000.000)
+    sched.submit(FoldRequest(2, _seq(40)), 1000.002)   # gap estimate: 2ms
+    # inside the burst: next arrival predicted in 2ms, fill benefit
+    # solo - marginal = 90ms >> 2ms -> hold
+    assert sched.next_batch(1000.002) is None
+    assert sched.linger_decisions["hold_adaptive"] == 1
+    # 10ms later the predicted arrival is overdue -> launch well before
+    # the 50ms fixed cap would have released the batch
+    batch = sched.next_batch(1000.010)
+    assert batch is not None and batch.batch_size == 2
+    assert sched.linger_decisions["launch_adaptive"] == 1
+    assert sched.linger_bad_holds == 1      # the hold never attracted a fill
+
+
+def test_adaptive_launches_when_fill_benefit_too_small():
+    cm = CostModel()
+    cm.record_calibration(cm.key_for(64, 1), 100.0, samples=3)
+    cm.record_calibration(cm.key_for(64, 4), 397.0, samples=3)  # 99ms/row
+    sched = _burst_sched(cm)
+    sched.submit(FoldRequest(1, _seq(40)), 1000.000)
+    sched.submit(FoldRequest(2, _seq(40)), 1000.002)
+    # benefit solo - marginal = 1ms < 2ms predicted wait: not worth holding
+    batch = sched.next_batch(1000.002)
+    assert batch is not None and batch.batch_size == 2
+    assert sched.linger_decisions["launch_adaptive"] == 1
+    assert sched.linger_holds == 0
+
+
+def test_fixed_policy_when_adaptive_disabled():
+    sched = _burst_sched(_burst_model(), adaptive=False)
+    sched.submit(FoldRequest(1, _seq(40)), 1000.000)
+    sched.submit(FoldRequest(2, _seq(40)), 1000.002)
+    # the arrival is long overdue, but the fixed budget holds anyway
+    assert sched.next_batch(1000.010) is None
+    assert sched.linger_decisions["hold_fixed"] == 1
+    assert sched.linger_decisions["hold_adaptive"] == 0
+    batch = sched.next_batch(1000.051)      # past the 50ms cap
+    assert batch is not None
+    assert sched.linger_decisions["launch_fixed"] == 1
+
+
+def test_hold_that_fills_is_not_counted_bad():
+    sched = _burst_sched(_burst_model(), adaptive=False)
+    sched.submit(FoldRequest(1, _seq(40)), 1000.000)
+    sched.submit(FoldRequest(2, _seq(40)), 1000.002)
+    assert sched.next_batch(1000.002) is None          # held at size 2
+    sched.submit(FoldRequest(3, _seq(40)), 1000.004)
+    sched.submit(FoldRequest(4, _seq(40)), 1000.006)
+    batch = sched.next_batch(1000.006)                 # full: launches
+    assert batch is not None and batch.batch_size == 4
+    assert sched.linger_bad_holds == 0                 # the hold paid off
+
+
+# --------------------------------------------------------------------------
+# engine integration: calibration round trip, pricing, feasibility
+# --------------------------------------------------------------------------
+def test_calibration_roundtrip_zero_compiles_identical_coords(tmp_path):
+    seqs = [_seq(20), _seq(28)]
+    c1 = _client()
+    calibrate(c1.core, passes=1)
+    cm1 = c1.core.cost_model
+    assert cm1.has_calibration() and cm1.calibrated_count >= 2
+    assert cm1.age_s() is not None and cm1.age_s() >= 0.0
+    n0 = c1.core.compile_count
+    handles = [c1.submit(s) for s in seqs]
+    c1.drive()
+    r1 = [h.result() for h in handles]
+    assert all(r.ok for r in r1)
+    assert c1.core.compile_count == n0      # post-calibration: zero compiles
+    # the live EWMA refined the served key, the calibration stayed frozen
+    key = cm1.key_for(32, 2)
+    assert cm1.entries[key].samples > 1
+    assert cm1.entries[key].calibrated_ms is not None
+    path = str(tmp_path / "table.json")
+    cm1.save(path)
+
+    # a fresh engine reloading the table serves the same trace with ZERO
+    # compiles after warmup_from_table, bitwise identically
+    cm2 = load_cost_table(path)
+    assert cm2.calibrated_count == cm1.calibrated_count
+    c2 = _client(cost_model=cm2)
+    assert c2.core.warmup_from_table() >= 2
+    n2 = c2.core.compile_count
+    handles = [c2.submit(s) for s in seqs]
+    c2.drive()
+    r2 = [h.result() for h in handles]
+    assert c2.core.compile_count == n2      # reload: zero new compiles
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.coords, b.coords)
+
+
+def test_launch_size_pricing():
+    client = _client(max_tokens_per_batch=128, max_batch=4)
+    core = client.core
+    core._executable(32, 4, core.scheme)    # only size 4 is cached
+    cm = core.cost_model
+    placement = core.placement.placement_for(32)
+
+    # uncalibrated: the static waste guard refuses 3 dummy rows for 1 real
+    assert core.launch_size_for(32, 1, core.scheme, placement) == 1
+    assert core.launch_size_for(32, 3, core.scheme, placement) == 4
+
+    # cheap rows, expensive compile: reusing the cached 4 wins for n=1
+    cm.record_calibration(cm.key_for(32, 4), 4.0, samples=3)   # 1ms/row
+    cm.record_compile(cm.key_for(32, 4), 500.0)
+    assert core.launch_size_for(32, 1, core.scheme, placement) == 4
+
+    # expensive rows, cheap compile: the exact size wins
+    cm.record_calibration(cm.key_for(32, 4), 800.0, samples=3)  # 200ms/row
+    cm.record_compile(cm.key_for(32, 4), 1.0)
+    assert core.launch_size_for(32, 1, core.scheme, placement) == 1
+
+
+def test_client_infeasible_submit_and_queue_purge():
+    clock = ManualClock()
+    client = _client(max_tokens_per_batch=32, max_batch=1, clock=clock)
+    cm = client.core.cost_model
+    cm.record_calibration(cm.key_for(32, 1), 100.0, samples=3)
+
+    # submit-time: measured eta 100ms > the 50ms deadline -> terminal now
+    h = client.submit(_seq(20), deadline_s=0.05)
+    assert h.status == "REJECTED" and h.done
+    assert "deadline infeasible" in h.result().reason
+
+    # mid-queue: feasible at submit, doomed once the clock eats the budget
+    ahead = client.submit(_seq(20))
+    doomed = client.submit(_seq(24), deadline_s=0.5)
+    assert doomed.status == QUEUED
+    clock.advance(0.42)     # 80ms of budget left < 100ms measured solo
+    client.drive()
+    assert ahead.status == DONE
+    assert doomed.status == EXPIRED
+    assert "deadline infeasible" in doomed.result().reason
+    s = client.metrics.summary()["cost_model"]
+    assert s["infeasible"]["submit"] == 1
+    assert s["infeasible"]["queue"] == 1
+
+
+def test_metrics_cost_model_block():
+    m = EngineMetrics()
+    m.record_prediction(100.0, 50.0)        # off by exactly 2x
+    m.record_cost_table(5, 3, 12.0)
+    decisions = {"hold_adaptive": 2, "launch_adaptive": 1,
+                 "hold_fixed": 0, "launch_fixed": 0}
+    m.record_linger_decisions(decisions, 1)
+    m.record_linger_decisions(decisions, 1)     # idempotent mirror sync
+    m.record_infeasible("submit")
+    s = m.summary()["cost_model"]
+    assert s["table_entries"] == 5 and s["table_calibrated"] == 3
+    assert s["table_age_s"] == 12.0
+    assert s["predictions"] == 1
+    assert s["prediction_error"]["p50"] == pytest.approx(2.0)
+    assert s["linger_decisions"] == decisions
+    assert s["linger_bad_holds"] == 1
+    assert s["infeasible"]["submit"] == 1
+
+
+# --------------------------------------------------------------------------
+# calibrated dispatch floors
+# --------------------------------------------------------------------------
+def test_effective_floors_precedence(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_FLASH_SEQ, raising=False)
+    monkeypatch.delenv(dispatch.ENV_QMM_TOKENS, raising=False)
+    dispatch.clear_calibrated_floors()
+    assert dispatch.effective_floors() == (dispatch.MIN_FLASH_SEQ,
+                                           dispatch.MIN_QMM_TOKENS, "static")
+    dispatch.set_calibrated_floors(flash_seq=32, qmm_tokens=16)
+    assert dispatch.effective_floors() == (32, 16, "calibrated")
+    # env overrides beat the table, read at call time
+    monkeypatch.setenv(dispatch.ENV_FLASH_SEQ, "8")
+    assert dispatch.effective_floors() == (8, 16, "calibrated")
+    monkeypatch.setenv(dispatch.ENV_FLASH_SEQ, "not-an-int")
+    with pytest.raises(ValueError, match="REPRO_MIN_FLASH_SEQ"):
+        dispatch.effective_floors()
+
+
+def test_describe_label_flips_with_calibrated_floors(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_FLASH_SEQ, raising=False)
+    monkeypatch.delenv(dispatch.ENV_QMM_TOKENS, raising=False)
+    dispatch.clear_calibrated_floors()
+    static = dispatch.describe("auto", seq=32)
+    assert static.startswith("auto:") and "calibrated" not in static
+    dispatch.set_calibrated_floors(flash_seq=128, qmm_tokens=64)
+    assert dispatch.describe("auto", seq=32).startswith("auto:calibrated:")
+    dispatch.clear_calibrated_floors()
+    assert dispatch.describe("auto", seq=32) == static
+
+
+def test_install_floors_from_table(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_FLASH_SEQ, raising=False)
+    monkeypatch.delenv(dispatch.ENV_QMM_TOKENS, raising=False)
+    assert install_floors(CostModel()) is False      # no floors recorded
+    cm = CostModel()
+    cm.floors = {"flash_seq": 96, "qmm_tokens": 32,
+                 "source": "pinned-off-tpu"}
+    assert install_floors(cm) is True
+    assert dispatch.effective_floors() == (96, 32, "calibrated")
+
+
+def test_calibrate_floors_pins_statics_off_tpu():
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU pinning behavior")
+    floors = calibrate_floors()
+    assert floors == {"flash_seq": dispatch.MIN_FLASH_SEQ,
+                      "qmm_tokens": dispatch.MIN_QMM_TOKENS,
+                      "source": "pinned-off-tpu"}
+
+
+def test_calibrate_floors_measures_on_tpu(monkeypatch):
+    """On a (mocked) TPU the ladder crossover search runs; the routed ops
+    are stubbed so the search exercises only the measurement scaffolding."""
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    monkeypatch.setattr(dispatch, "attention",
+                        lambda q, k, v, backend=None: q)
+    monkeypatch.setattr(dispatch, "quantized_linear",
+                        lambda x, w, bits=0, k_outliers=0, backend=None: x)
+    floors = calibrate_floors(seq_ladder=(8,), token_ladder=(16,), passes=1)
+    assert floors["source"] == "measured"
+    assert floors["flash_seq"] in (8, 32)       # crossed, or 4x the ladder
+    assert floors["qmm_tokens"] in (16, 64)
